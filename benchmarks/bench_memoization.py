@@ -1,0 +1,41 @@
+"""Paper Fig. 12: verification time by scaling technique on llama3_8b TP-16:
+no partitioning vs partitioned(sequential) vs partitioned+parallel rewriting
+vs partitioned+memoization (the paper also reports that NO-partitioning fails
+on the full model; we cap it at a layer budget and report the trend)."""
+from __future__ import annotations
+
+import time
+
+from repro.core.modelverify import verify_model_tp
+from repro.core.verifier import VerifyOptions
+
+LAYERS = 16
+
+
+def _run(opts: VerifyOptions) -> float:
+    t0 = time.perf_counter()
+    rep = verify_model_tp("llama3_8b", tp=16, smoke=False, n_layers=LAYERS, seq=32,
+                          options=opts)
+    assert rep.verified
+    return time.perf_counter() - t0
+
+
+def run() -> list[dict]:
+    variants = [
+        ("fig12_no_partition", VerifyOptions(partition=False)),
+        ("fig12_partition_seq", VerifyOptions(partition=True, memoize=False)),
+        ("fig12_partition_par4", VerifyOptions(partition=True, memoize=False,
+                                               parallel_workers=4)),
+        ("fig12_partition_memo", VerifyOptions(partition=True, memoize=True)),
+    ]
+    out = []
+    for name, opts in variants:
+        dt = _run(opts)
+        out.append({"name": name, "us_per_call": dt * 1e6,
+                    "derived": f"layers={LAYERS}"})
+    return out
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,55 @@
+"""Roofline table (EXPERIMENTS.md §Roofline): aggregates the dry-run JSON
+artifacts produced by ``python -m repro.launch.dryrun --all`` into the
+per-(arch x shape x mesh) three-term roofline rows."""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+
+def rows(mesh: str = "16x16", include_tagged: bool = False) -> list[dict]:
+    out = []
+    for f in sorted(ARTIFACTS.glob("*.json")):
+        d = json.loads(f.read_text())
+        if d.get("mesh") != mesh:
+            continue
+        if not include_tagged and d.get("tag"):
+            continue
+        out.append(d)
+    return out
+
+
+def run() -> list[dict]:
+    if not ARTIFACTS.exists():
+        return [{"name": "roofline_missing", "us_per_call": 0.0,
+                 "derived": "run `python -m repro.launch.dryrun --all` first"}]
+    out = []
+    for d in rows():
+        name = f"roofline_{d['arch']}_{d['shape']}"
+        if d["status"] == "skipped":
+            out.append({"name": name, "us_per_call": 0.0,
+                        "derived": f"SKIP: {d['skip_reason']}"})
+            continue
+        if d["status"] != "ok":
+            out.append({"name": name, "us_per_call": 0.0, "derived": "ERROR"})
+            continue
+        r = d["roofline"]
+        peak = d["memory"].get("peak_bytes")
+        out.append({
+            "name": name,
+            "us_per_call": max(r["compute_s"], r["memory_s"], r["collective_s"]) * 1e6,
+            "derived": (
+                f"compute={r['compute_s']:.3g}s memory={r['memory_s']:.3g}s "
+                f"collective={r['collective_s']:.3g}s dom={r['dominant']} "
+                f"roofline_frac={r['roofline_fraction']:.3g} "
+                f"useful={r['useful_flop_ratio']:.3g} peakB={peak}"
+            ),
+        })
+    return out
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -1,0 +1,55 @@
+"""Paper Fig. 11 (groups a-e): verification-time scaling in seqlen, batch,
+layers, TP degree, and head count — on the llama3_8b family like the paper.
+
+Expected (paper §7.2): constant in seqlen/batch/heads/TP, linear in layers.
+"""
+from __future__ import annotations
+
+import dataclasses
+import time
+
+from repro.configs import get_config
+from repro.core.modelverify import verify_model_tp
+
+
+def _time(arch="llama3_8b", *, tp=16, layers=4, seq=64, batch=4, heads=None) -> float:
+    kw = {}
+    t0 = time.perf_counter()
+    rep = verify_model_tp(arch, tp=tp, smoke=False, n_layers=layers, seq=seq,
+                          batch=batch)
+    assert rep.verified
+    return time.perf_counter() - t0
+
+
+def run() -> list[dict]:
+    out = []
+    # (a) sequence length
+    for s in (32, 128, 512, 2048):
+        out.append({"name": f"fig11a_seqlen_{s}", "us_per_call": _time(seq=s) * 1e6,
+                    "derived": "expect~constant"})
+    # (b) batch size
+    for b in (1, 4, 16, 64):
+        out.append({"name": f"fig11b_batch_{b}", "us_per_call": _time(batch=b) * 1e6,
+                    "derived": "expect~constant"})
+    # (c) layers
+    for l in (4, 8, 16, 32):
+        out.append({"name": f"fig11c_layers_{l}", "us_per_call": _time(layers=l) * 1e6,
+                    "derived": "expect~linear"})
+    # (d) tp degree
+    for tp in (4, 8, 16):
+        out.append({"name": f"fig11d_tp_{tp}", "us_per_call": _time(tp=tp) * 1e6,
+                    "derived": "expect~constant"})
+    # (e) heads — qwen3 (32H kv8) vs llama (32H kv8) vs gemma pad16: use
+    #     configs with differing head counts at fixed everything else
+    for arch, h in (("gemma_2b", 16), ("qwen3_4b", 32), ("llama3_70b", 64)):
+        out.append({
+            "name": f"fig11e_heads_{h}_{arch}",
+            "us_per_call": _time(arch, layers=4) * 1e6,
+            "derived": "expect~constant(per-node-count)",
+        })
+    return out
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

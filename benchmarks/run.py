@@ -1,0 +1,40 @@
+"""Benchmark harness (deliverable d): one module per paper table/figure.
+Prints ``name,us_per_call,derived`` CSV."""
+from __future__ import annotations
+
+import sys
+import traceback
+
+
+def main() -> None:
+    from benchmarks import (
+        bench_bug_detection,
+        bench_memoization,
+        bench_roofline,
+        bench_scalability,
+        bench_verification,
+    )
+
+    suites = [
+        ("verification(Table2)", bench_verification),
+        ("scalability(Fig11)", bench_scalability),
+        ("memoization(Fig12)", bench_memoization),
+        ("bug_detection(Tables4-5)", bench_bug_detection),
+        ("roofline(Roofline)", bench_roofline),
+    ]
+    print("name,us_per_call,derived")
+    failed = False
+    for label, mod in suites:
+        try:
+            for row in mod.run():
+                derived = str(row.get("derived", "")).replace(",", ";")
+                print(f"{row['name']},{row['us_per_call']:.1f},{derived}")
+        except Exception as e:  # report and continue
+            failed = True
+            print(f"{label}_FAILED,0,{type(e).__name__}: {e}")
+            traceback.print_exc(file=sys.stderr)
+    sys.exit(1 if failed else 0)
+
+
+if __name__ == "__main__":
+    main()

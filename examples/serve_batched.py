@@ -1,0 +1,15 @@
+"""Batched serving example (deliverable b): continuous-batching engine over a
+smoke model with mixed prompt lengths.
+
+    PYTHONPATH=src python examples/serve_batched.py --arch gemma_2b
+"""
+import argparse
+import sys
+
+from repro.launch.serve import main as serve_main
+
+ap = argparse.ArgumentParser()
+ap.add_argument("--arch", default="gemma_2b")
+args, extra = ap.parse_known_args()
+sys.exit(serve_main(["--arch", args.arch, "--smoke", "--requests", "6",
+                     "--max-new", "12", "--slots", "3", *extra]))

@@ -1,0 +1,7 @@
+"""Scalify-JAX: a verified multi-pod JAX training/inference framework.
+
+The paper's contribution (semantic-equivalence verification of distributed
+computational graphs) lives in :mod:`repro.core`; the substrate it verifies —
+model zoo, distributed runtime, trainer, serving, Pallas kernels, launchers —
+in the sibling subpackages.  See README.md / DESIGN.md.
+"""

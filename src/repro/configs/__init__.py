@@ -1,0 +1,2 @@
+"""Architecture configs: assigned 10 + verifier-benchmark extras."""
+from .base import ARCH_IDS, EXTRA_IDS, SHAPES, ArchConfig, ShapeSpec, get_config, input_specs, skip_reason

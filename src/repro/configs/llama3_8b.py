@@ -1,0 +1,27 @@
+"""Llama-3.1-8B [Meta] — verifier-benchmark config (paper Table 2 L1)."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name='llama3_8b',
+    family='dense',
+    n_layers=32,
+    d_model=4096,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=14336,
+    vocab=128256,
+    mlp_act='swiglu',
+    n_kv_heads_padded=16,
+)
+
+SMOKE = ArchConfig(
+    name='llama3_8b_smoke',
+    family='dense',
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=128,
+    vocab=256,
+    mlp_act='swiglu',
+)

@@ -1,0 +1,32 @@
+"""Qwen3-4B [hf:Qwen/Qwen3-*; hf-tier] — dense, per-head qk_norm, GQA kv=8."""
+from repro.configs.base import ArchConfig
+
+CONFIG = ArchConfig(
+    name='qwen3_4b',
+    family='dense',
+    n_layers=36,
+    d_model=2560,
+    n_heads=32,
+    n_kv_heads=8,
+    d_ff=9728,
+    vocab=151936,
+    head_dim=128,
+    qk_norm=True,
+    mlp_act='swiglu',
+    rope_theta=1000000.0,
+    n_kv_heads_padded=16,
+)
+
+SMOKE = ArchConfig(
+    name='qwen3_4b_smoke',
+    family='dense',
+    n_layers=2,
+    d_model=64,
+    n_heads=4,
+    n_kv_heads=2,
+    d_ff=128,
+    vocab=256,
+    head_dim=16,
+    qk_norm=True,
+    mlp_act='swiglu',
+)

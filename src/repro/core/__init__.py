@@ -1,0 +1,39 @@
+"""Scalify-JAX core: semantic-equivalence verification of computational
+graphs via e-graph rewriting, Datalog-style relation propagation, and
+symbolic bijection inference.
+
+Public API:
+    verify_sharded(base_fn, dist_fn, *avals, ...) -> Report
+    verify_graphs(base, dist, ...) -> Report
+    trace / trace_sharded  -> TensorIR graphs from jax functions
+    inject  -> silent-error injection for testing/benchmarks
+"""
+from .bijection import Layout, NotSplitMerge, infer_bijection, layout_of_ops
+from .egraph import EGraph, GraphEGraph
+from .inject import ALL_INJECTORS, Injection, inject_all
+from .ir import Graph, Node
+from .partition import PartitionedVerifier, partition_layers, topological_stages
+from .relations import DUP, PARTIAL, SHARD, Fact, RelStore
+from .rules import Propagator
+from .trace import trace, trace_sharded
+from .verifier import (
+    BugSite,
+    InputFact,
+    OutputSpec,
+    Report,
+    VerifyOptions,
+    localize,
+    verify_graphs,
+    verify_sharded,
+)
+
+__all__ = [
+    "Layout", "NotSplitMerge", "infer_bijection", "layout_of_ops",
+    "EGraph", "GraphEGraph", "Graph", "Node",
+    "DUP", "SHARD", "PARTIAL", "Fact", "RelStore", "Propagator",
+    "PartitionedVerifier", "partition_layers", "topological_stages",
+    "trace", "trace_sharded",
+    "BugSite", "InputFact", "OutputSpec", "Report", "VerifyOptions",
+    "localize", "verify_graphs", "verify_sharded",
+    "ALL_INJECTORS", "Injection", "inject_all",
+]

@@ -1,0 +1,244 @@
+"""A compact e-graph with hash-consing, union-find and congruence closure.
+
+This is the equality-saturation substrate of the verifier (paper §2.2/§3).
+It follows the classic egg design [Willsey et al., POPL'21]: e-nodes are
+``(op, child e-class ids, params)`` tuples; e-classes are union-find
+partitions; ``rebuild`` restores congruence after merges.
+
+We deliberately keep the engine small: the heavy lifting in Scalify is the
+*relational* layer (:mod:`repro.core.relations`) layered on top, exactly as
+egglog layers Datalog over e-graphs.  The e-graph's job here is:
+
+* canonicalize both IR graphs so structurally identical subtrees share an
+  e-class (this powers baseline-node lookup during rule matching and layer
+  memoization),
+* saturate a small set of *structural* rewrites (layout-chain normalization,
+  identity elimination, commutative canonicalization) so trivially-rewritten
+  graphs merge without relational reasoning.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Any, Callable, Iterable, Optional
+
+from .ir import COMMUTATIVE, Graph, Node
+
+
+@dataclass(frozen=True)
+class ENode:
+    op: str
+    children: tuple[int, ...]
+    params: tuple
+    shape: tuple[int, ...]
+    dtype: str
+
+    def canon(self, find: Callable[[int], int]) -> "ENode":
+        ch = tuple(find(c) for c in self.children)
+        if self.op in COMMUTATIVE and len(ch) == 2:
+            ch = tuple(sorted(ch))
+        return ENode(self.op, ch, self.params, self.shape, self.dtype)
+
+
+class EGraph:
+    def __init__(self) -> None:
+        self._parent: list[int] = []
+        self._hashcons: dict[ENode, int] = {}
+        self._class_nodes: dict[int, list[ENode]] = {}
+        self._worklist: list[int] = []
+        self.version = 0  # bumped on every merge (saturation detection)
+
+    # -- union-find ---------------------------------------------------------
+    def find(self, ec: int) -> int:
+        root = ec
+        while self._parent[root] != root:
+            root = self._parent[root]
+        while self._parent[ec] != root:  # path compression
+            self._parent[ec], ec = root, self._parent[ec]
+        return root
+
+    def _new_class(self) -> int:
+        ec = len(self._parent)
+        self._parent.append(ec)
+        self._class_nodes[ec] = []
+        return ec
+
+    # -- insertion ----------------------------------------------------------
+    def add(self, enode: ENode) -> int:
+        enode = enode.canon(self.find)
+        found = self._hashcons.get(enode)
+        if found is not None:
+            return self.find(found)
+        ec = self._new_class()
+        self._hashcons[enode] = ec
+        self._class_nodes[ec].append(enode)
+        return ec
+
+    def lookup(self, enode: ENode) -> Optional[int]:
+        """Congruence lookup: the e-class of this e-node if present."""
+        found = self._hashcons.get(enode.canon(self.find))
+        return None if found is None else self.find(found)
+
+    # -- merging + congruence closure ----------------------------------------
+    def merge(self, a: int, b: int) -> int:
+        a, b = self.find(a), self.find(b)
+        if a == b:
+            return a
+        self.version += 1
+        # union by size of node list
+        if len(self._class_nodes.get(a, ())) < len(self._class_nodes.get(b, ())):
+            a, b = b, a
+        self._parent[b] = a
+        self._class_nodes.setdefault(a, []).extend(self._class_nodes.pop(b, []))
+        self._worklist.append(a)
+        return a
+
+    def rebuild(self) -> None:
+        """Restore the congruence invariant after merges."""
+        while self._worklist:
+            todo, self._worklist = self._worklist, []
+            seen: set[int] = set()
+            for ec in todo:
+                ec = self.find(ec)
+                if ec in seen:
+                    continue
+                seen.add(ec)
+                self._repair(ec)
+
+    def _repair(self, _ec: int) -> None:
+        # Re-canonicalize the entire hashcons; merge congruent duplicates.
+        # O(n) per repair round but n stays small (per-layer subgraphs).
+        new_hash: dict[ENode, int] = {}
+        for enode, ec in list(self._hashcons.items()):
+            canon = enode.canon(self.find)
+            ec = self.find(ec)
+            other = new_hash.get(canon)
+            if other is not None and self.find(other) != ec:
+                ec = self.merge(other, ec)
+            new_hash[canon] = ec
+        self._hashcons = new_hash
+
+    # -- queries --------------------------------------------------------------
+    def enodes(self, ec: int) -> list[ENode]:
+        ec = self.find(ec)
+        out, seen = [], set()
+        for enode, cls in self._hashcons.items():
+            if self.find(cls) == ec and enode not in seen:
+                seen.add(enode)
+                out.append(enode)
+        return out
+
+    def num_classes(self) -> int:
+        return len({self.find(i) for i in range(len(self._parent))})
+
+
+class GraphEGraph:
+    """An e-graph view over one :class:`~repro.core.ir.Graph`.
+
+    Maps every graph node id to an e-class; applies structural rewrites until
+    saturation.  Leaf nodes (inputs/params/consts) get *distinct* classes
+    keyed by node id — two different parameters are never equal.
+    """
+
+    STRUCTURAL_RULES = (
+        "transpose_fuse",
+        "transpose_identity",
+        "reshape_fuse",
+        "reshape_identity",
+        "convert_identity",
+        "broadcast_identity",
+    )
+
+    def __init__(self, graph: Graph, egraph: Optional[EGraph] = None, tag: str = "") -> None:
+        self.graph = graph
+        self.eg = egraph or EGraph()
+        self.tag = tag  # distinguishes leaves of different graphs sharing an EGraph
+        self.node_class: dict[int, int] = {}
+        self._leaf_enodes: dict[int, ENode] = {}
+        for node in graph:
+            self.node_class[node.id] = self._insert(node)
+        self._saturate_structural()
+
+    # -- insertion -----------------------------------------------------------
+    def _insert(self, node: Node) -> int:
+        if not node.inputs:
+            # leaf identity: consts with equal payloads are the same value
+            # (merged eclass); other leaves stay unique per node id
+            if node.op == "const" and node.param("value_hash"):
+                tag = f"const:{node.param('value_hash')}"
+            else:
+                tag = f"{self.tag}:{node.id}"
+            enode = ENode(node.op, (), (("leaf", tag),) + node.params,
+                          node.shape, node.dtype)
+            self._leaf_enodes[node.id] = enode
+            return self.eg.add(enode)
+        children = tuple(self.eg.find(self.node_class[i]) for i in node.inputs)
+        return self.eg.add(ENode(node.op, children, node.params, node.shape, node.dtype))
+
+    def cls(self, nid: int) -> int:
+        return self.eg.find(self.node_class[nid])
+
+    def same(self, a: int, b: int) -> bool:
+        return self.cls(a) == self.cls(b)
+
+    # -- structural rewrites ---------------------------------------------------
+    def _saturate_structural(self, max_iters: int = 10) -> None:
+        g = self.graph
+        for _ in range(max_iters):
+            before = self.eg.version
+            for node in g:
+                self._apply_structural(node)
+            self.eg.rebuild()
+            if self.eg.version == before:
+                break
+
+    def _apply_structural(self, node: Node) -> None:
+        g, eg = self.graph, self.eg
+        if node.op == "transpose":
+            perm = node.param("permutation")
+            src = g[node.inputs[0]]
+            if perm is not None and tuple(perm) == tuple(range(len(perm))):
+                eg.merge(self.cls(node.id), self.cls(src.id))  # identity
+            if src.op == "transpose":
+                p1 = src.param("permutation")
+                fused = tuple(p1[i] for i in perm)
+                merged = ENode(
+                    "transpose",
+                    (self.cls(src.inputs[0]),),
+                    (("permutation", fused),),
+                    node.shape,
+                    node.dtype,
+                )
+                eg.merge(self.cls(node.id), eg.add(merged))
+        elif node.op == "reshape":
+            src = g[node.inputs[0]]
+            if node.shape == src.shape:
+                eg.merge(self.cls(node.id), self.cls(src.id))  # identity
+            if src.op == "reshape":
+                merged = ENode(
+                    "reshape",
+                    (self.cls(src.inputs[0]),),
+                    (("new_sizes", node.shape),),
+                    node.shape,
+                    node.dtype,
+                )
+                eg.merge(self.cls(node.id), eg.add(merged))
+                if node.shape == g[src.inputs[0]].shape:
+                    eg.merge(self.cls(node.id), self.cls(src.inputs[0]))
+        elif node.op == "convert":
+            src = g[node.inputs[0]]
+            if node.dtype == src.dtype:
+                eg.merge(self.cls(node.id), self.cls(src.id))
+        elif node.op == "broadcast":
+            src = g[node.inputs[0]]
+            if node.shape == src.shape and node.param("broadcast_dimensions") == tuple(
+                range(len(src.shape))
+            ):
+                eg.merge(self.cls(node.id), self.cls(src.id))
+
+    # -- congruence lookup used by the relational rules -------------------------
+    def find_node(self, op: str, child_classes: Iterable[int], params: tuple,
+                  shape: tuple[int, ...], dtype: str) -> Optional[int]:
+        """E-class of ``op(child_classes)`` if such a node exists, else None."""
+        return self.eg.lookup(
+            ENode(op, tuple(self.eg.find(c) for c in child_classes), params, shape, dtype)
+        )

@@ -1,0 +1,330 @@
+"""Silent-error injection: graph surgery reproducing the paper's five bug
+categories (§7.3) for the detection benchmark (Tables 4/5 analogue).
+
+Each injector takes a distributed TensorIR graph and returns a mutated copy
+plus metadata (description, expected diagnostic category, injected site).
+The mutations mirror real-world bugs: missing/redundant all-reduce, wrong
+replica groups, swapped reshape dims (the BSH bug of Fig. 1), wrong transpose,
+precision drop, wrong all-gather dim, wrong all-to-all axes, shifted slices.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Callable, Optional
+
+from .ir import Graph, Node
+
+
+@dataclass
+class Injection:
+    name: str
+    description: str
+    category: str  # expected diagnostic category (paper bug classes 1-5)
+    graph: Graph
+    site: str  # source location of the mutated node
+
+
+def _remap_params(params: tuple, **updates) -> dict:
+    d = {k: v for k, v in params}
+    d.update(updates)
+    return d
+
+
+def _surgery(g: Graph, edit: Callable[[Graph, Node, dict[int, int]], Optional[int]]) -> Graph:
+    """Rebuild the graph applying ``edit`` to each node.  ``edit`` returns the
+    new node id (or None to re-add the node unchanged)."""
+    ng = Graph(g.name + "+bug")
+    remap: dict[int, int] = {}
+    for n in g:
+        new_id = edit(ng, n, remap)
+        if new_id is None:
+            new_id = ng.add(
+                n.op,
+                [remap[i] for i in n.inputs],
+                n.shape,
+                n.dtype,
+                {k: v for k, v in n.params},
+                src=n.src,
+                layer=n.layer,
+                scope=n.scope,
+            )
+        remap[n.id] = new_id
+    ng.outputs = [remap[o] for o in g.outputs]
+    return ng
+
+
+def _find(g: Graph, op: str, pred=None, index: int = 0) -> Optional[Node]:
+    hits = [n for n in g if n.op == op and (pred is None or pred(n))]
+    return hits[index] if len(hits) > index else None
+
+
+# ---------------------------------------------------------------------------
+# category 1: incorrect distributed operation
+
+
+def drop_all_reduce(g: Graph, index: int = 0) -> Optional[Injection]:
+    tgt = _find(g, "all_reduce", index=index)
+    if tgt is None:
+        return None
+
+    def edit(ng: Graph, n: Node, remap):
+        if n.id == tgt.id:
+            return remap[n.inputs[0]]  # bypass the collective entirely
+        return None
+
+    return Injection(
+        f"missing_all_reduce@{index}",
+        f"removed all_reduce at {tgt.src}",
+        "missing_all_reduce",
+        _surgery(g, edit),
+        tgt.src,
+    )
+
+
+def duplicate_all_reduce(g: Graph, index: int = 0) -> Optional[Injection]:
+    tgt = _find(g, "all_reduce", index=index)
+    if tgt is None:
+        return None
+
+    def edit(ng: Graph, n: Node, remap):
+        if n.id == tgt.id:
+            first = ng.add(n.op, [remap[i] for i in n.inputs], n.shape, n.dtype,
+                           {k: v for k, v in n.params}, src=n.src, layer=n.layer, scope=n.scope)
+            return ng.add(n.op, [first], n.shape, n.dtype,
+                          {k: v for k, v in n.params}, src=n.src, layer=n.layer, scope=n.scope)
+        return None
+
+    return Injection(
+        f"redundant_all_reduce@{index}",
+        f"duplicated all_reduce at {tgt.src}",
+        "redundant_all_reduce",
+        _surgery(g, edit),
+        tgt.src,
+    )
+
+
+def wrong_collective_op(g: Graph, index: int = 0) -> Optional[Injection]:
+    tgt = _find(g, "all_reduce", lambda n: n.param("reduce_op") == "add", index)
+    if tgt is None:
+        return None
+
+    def edit(ng: Graph, n: Node, remap):
+        if n.id == tgt.id:
+            return ng.add(n.op, [remap[i] for i in n.inputs], n.shape, n.dtype,
+                          _remap_params(n.params, reduce_op="max"),
+                          src=n.src, layer=n.layer, scope=n.scope)
+        return None
+
+    return Injection(
+        f"wrong_collective_op@{index}",
+        f"all_reduce(add) replaced by all_reduce(max) at {tgt.src}",
+        "unverified_frontier",
+        _surgery(g, edit),
+        tgt.src,
+    )
+
+
+# ---------------------------------------------------------------------------
+# category 2: incorrect distributed configuration
+
+
+def wrong_replica_groups(g: Graph, index: int = 0) -> Optional[Injection]:
+    tgt = _find(g, "all_reduce", index=index)
+    if tgt is None:
+        return None
+
+    def edit(ng: Graph, n: Node, remap):
+        if n.id == tgt.id:
+            return ng.add(n.op, [remap[i] for i in n.inputs], n.shape, n.dtype,
+                          _remap_params(n.params, groups=((0, 1), (2, 3))),
+                          src=n.src, layer=n.layer, scope=n.scope)
+        return None
+
+    return Injection(
+        f"wrong_replica_groups@{index}",
+        f"all_reduce at {tgt.src} reduced over half-groups only",
+        "wrong_replica_groups",
+        _surgery(g, edit),
+        tgt.src,
+    )
+
+
+# ---------------------------------------------------------------------------
+# category 3: inconsistent tensor precision
+
+
+def precision_drop(g: Graph, index: int = 0) -> Optional[Injection]:
+    tgt = _find(g, "dot", lambda n: n.dtype in ("float32", "bfloat16"), index)
+    if tgt is None:
+        return None
+    low = "bfloat16" if tgt.dtype == "float32" else "float16"
+
+    def edit(ng: Graph, n: Node, remap):
+        if n.id == tgt.id:
+            dot = ng.add(n.op, [remap[i] for i in n.inputs], n.shape, low,
+                         {k: v for k, v in n.params}, src=n.src, layer=n.layer, scope=n.scope)
+            return ng.add("convert", [dot], n.shape, n.dtype,
+                          {"new_dtype": n.dtype}, src=n.src, layer=n.layer, scope=n.scope)
+        return None
+
+    return Injection(
+        f"precision_drop@{index}",
+        f"dot at {tgt.src} computed in {low} with silent upcast",
+        "precision_mismatch",
+        _surgery(g, edit),
+        tgt.src,
+    )
+
+
+# ---------------------------------------------------------------------------
+# category 4: incorrect axis splitting (the BSH reshape bug, Fig. 1)
+
+
+def swap_reshape_dims(g: Graph, index: int = 0) -> Optional[Injection]:
+    def pred(n: Node) -> bool:
+        s = n.shape
+        return len(s) >= 2 and s[0] != s[1] and s[0] > 1 and s[1] > 1
+
+    tgt = _find(g, "reshape", pred, index)
+    if tgt is None:
+        return None
+    bad = (tgt.shape[1], tgt.shape[0]) + tgt.shape[2:]
+
+    def edit(ng: Graph, n: Node, remap):
+        if n.id == tgt.id:
+            r = ng.add("reshape", [remap[n.inputs[0]]], bad, n.dtype,
+                       {"new_sizes": bad}, src=n.src, layer=n.layer, scope=n.scope)
+            # transpose back so downstream shapes still match (the silent part)
+            perm = (1, 0) + tuple(range(2, len(bad)))
+            return ng.add("transpose", [r], n.shape, n.dtype,
+                          {"permutation": perm}, src=n.src, layer=n.layer, scope=n.scope)
+        return None
+
+    return Injection(
+        f"swap_reshape_dims@{index}",
+        f"reshape at {tgt.src} swaps leading dims then transposes (BSH bug)",
+        "layout_mismatch",
+        _surgery(g, edit),
+        tgt.src,
+    )
+
+
+# ---------------------------------------------------------------------------
+# category 5: incorrect layout optimization
+
+
+def wrong_transpose(g: Graph, index: int = 0) -> Optional[Injection]:
+    # swapping the first two output dims must MOVE data (both dims > 1),
+    # otherwise the mutation is a unit-dim no-op the verifier rightly accepts
+    tgt = _find(g, "transpose",
+                lambda n: len(n.shape) >= 2 and n.shape[0] > 1 and n.shape[1] > 1,
+                index)
+    if tgt is None:
+        return None
+    perm = list(tgt.param("permutation"))
+    perm[0], perm[1] = perm[1], perm[0]
+    in_shape = None
+
+    def edit(ng: Graph, n: Node, remap):
+        nonlocal in_shape
+        if n.id == tgt.id:
+            src_shape = ng[remap[n.inputs[0]]].shape
+            new_shape = tuple(src_shape[p] for p in perm)
+            t = ng.add("transpose", [remap[n.inputs[0]]], new_shape, n.dtype,
+                       {"permutation": tuple(perm)}, src=n.src, layer=n.layer, scope=n.scope)
+            if new_shape != n.shape:
+                return ng.add("reshape", [t], n.shape, n.dtype,
+                              {"new_sizes": n.shape}, src=n.src, layer=n.layer, scope=n.scope)
+            return t
+        return None
+
+    return Injection(
+        f"wrong_transpose@{index}",
+        f"transpose at {tgt.src} uses a wrong permutation",
+        "layout_mismatch",
+        _surgery(g, edit),
+        tgt.src,
+    )
+
+
+def wrong_all_gather_dim(g: Graph, index: int = 0) -> Optional[Injection]:
+    tgt = _find(g, "all_gather", lambda n: len(n.shape) >= 2, index)
+    if tgt is None:
+        return None
+    dim = tgt.param("all_gather_dimension", 0)
+    new_dim = (dim + 1) % len(tgt.shape)
+
+    def edit(ng: Graph, n: Node, remap):
+        if n.id == tgt.id:
+            src_shape = ng[remap[n.inputs[0]]].shape
+            c = n.shape[dim] // src_shape[dim]
+            new_shape = list(src_shape)
+            new_shape[new_dim] = new_shape[new_dim] * c
+            gathered = ng.add("all_gather", [remap[n.inputs[0]]], tuple(new_shape), n.dtype,
+                              _remap_params(n.params, all_gather_dimension=new_dim),
+                              src=n.src, layer=n.layer, scope=n.scope)
+            return ng.add("reshape", [gathered], n.shape, n.dtype,
+                          {"new_sizes": n.shape}, src=n.src, layer=n.layer, scope=n.scope)
+        return None
+
+    return Injection(
+        f"wrong_all_gather_dim@{index}",
+        f"all_gather at {tgt.src} gathers along dim {new_dim} instead of {dim}",
+        "layout_mismatch",
+        _surgery(g, edit),
+        tgt.src,
+    )
+
+
+def shifted_slice(g: Graph, index: int = 0) -> Optional[Injection]:
+    def pred(n: Node) -> bool:
+        st = n.param("start_indices")
+        return st is not None and any(s > 0 for s in st)
+
+    tgt = _find(g, "slice", pred, index)
+    if tgt is None:
+        return None
+    st = list(tgt.param("start_indices"))
+    li = list(tgt.param("limit_indices"))
+    k = next(i for i, s in enumerate(st) if s > 0)
+    st[k] -= 1
+    li[k] -= 1
+
+    def edit(ng: Graph, n: Node, remap):
+        if n.id == tgt.id:
+            return ng.add("slice", [remap[n.inputs[0]]], n.shape, n.dtype,
+                          _remap_params(n.params, start_indices=tuple(st),
+                                        limit_indices=tuple(li)),
+                          src=n.src, layer=n.layer, scope=n.scope)
+        return None
+
+    return Injection(
+        f"shifted_slice@{index}",
+        f"slice at {tgt.src} off by one on dim {k} (KV-cache style misslice)",
+        "unverified_frontier",
+        _surgery(g, edit),
+        tgt.src,
+    )
+
+
+ALL_INJECTORS = [
+    drop_all_reduce,
+    duplicate_all_reduce,
+    wrong_collective_op,
+    wrong_replica_groups,
+    precision_drop,
+    swap_reshape_dims,
+    wrong_transpose,
+    wrong_all_gather_dim,
+    shifted_slice,
+]
+
+
+def inject_all(g: Graph) -> list[Injection]:
+    out = []
+    for inj in ALL_INJECTORS:
+        r = inj(g)
+        if r is not None:
+            out.append(r)
+    return out

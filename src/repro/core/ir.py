@@ -1,0 +1,243 @@
+"""TensorIR: the graph representation Scalify-JAX verifies.
+
+A :class:`Graph` is a flat, append-only SSA dataflow graph extracted from a
+jaxpr (see :mod:`repro.core.trace`) or constructed directly (benchmarks / bug
+injection).  Nodes carry op name, static params, shape/dtype, a source
+location (``file.py:line``) for bug localization, and an optional ``layer``
+tag used by the partitioner (Algorithm 1 in the paper).
+
+Op vocabulary (the verifier's rules are polymorphic over most of it):
+
+* leaf:        ``input``, ``param``, ``const``, ``iota``
+* elementwise: ``add sub mul div max min pow neg exp log tanh logistic rsqrt
+               sqrt erf abs sign floor select compare and or not integer_pow``
+* layout:      ``reshape`` (params: new_sizes), ``transpose`` (params:
+               permutation), ``broadcast`` (params: shape, broadcast_dims),
+               ``convert`` (params: new_dtype), ``squeeze``/``expand_dims``
+               are canonicalized to ``reshape``
+* structure:   ``slice`` (params: start, limit, strides), ``concat``
+               (params: dimension), ``pad``, ``gather``, ``scatter``,
+               ``dynamic_slice``, ``dynamic_update_slice``, ``rev``
+* compute:     ``dot`` (params: dimension_numbers), ``conv``,
+               ``reduce_sum/max/min/prod/and/or`` (params: axes),
+               ``argmax``, ``cumsum``, ``sort``, ``top_k``
+* collective:  ``all_reduce`` (params: reduce_op, axis, axis_size, groups),
+               ``all_gather`` (params: dim/tiled, axis, axis_size),
+               ``reduce_scatter`` (params: dim, axis, axis_size),
+               ``all_to_all`` (params: split_axis, concat_axis, axis,
+               axis_size), ``ppermute`` (params: perm, axis), ``axis_index``
+* opaque:      anything else — sound: never verified unless both sides have a
+               congruent opaque node.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass, field
+from typing import Any, Iterable, Iterator, Optional, Sequence
+
+# ---------------------------------------------------------------------------
+# op classes
+
+ELEMENTWISE = frozenset(
+    "add sub mul div max min pow neg exp log log1p tanh logistic rsqrt sqrt erf "
+    "abs sign floor ceil round select compare and or xor not integer_pow sin cos "
+    "square cbrt exp2 is_finite rem clamp nextafter lt le gt ge eq ne".split()
+)
+LAYOUT_OPS = frozenset({"reshape", "transpose"})
+COLLECTIVES = frozenset(
+    {"all_reduce", "all_gather", "reduce_scatter", "all_to_all", "ppermute"}
+)
+REDUCES = frozenset(
+    {"reduce_sum", "reduce_max", "reduce_min", "reduce_prod", "reduce_and", "reduce_or"}
+)
+LEAF_OPS = frozenset({"input", "param", "const", "iota"})
+
+# Commutative binary ops — children are canonically ordered in the e-graph.
+COMMUTATIVE = frozenset({"add", "mul", "max", "min", "and", "or", "xor"})
+
+
+def _freeze(value: Any) -> Any:
+    """Recursively convert params to hashable canonical form."""
+    if isinstance(value, (list, tuple)):
+        return tuple(_freeze(v) for v in value)
+    if isinstance(value, dict):
+        return tuple(sorted((k, _freeze(v)) for k, v in value.items()))
+    if isinstance(value, set):
+        return tuple(sorted(_freeze(v) for v in value))
+    return value
+
+
+@dataclass(frozen=True)
+class Node:
+    """A single SSA value in the graph."""
+
+    id: int
+    op: str
+    inputs: tuple[int, ...]
+    shape: tuple[int, ...]
+    dtype: str
+    params: tuple = ()  # frozen key/value tuple (see Graph.add)
+    src: str = ""  # "file.py:line" best effort
+    layer: Optional[int] = None  # layer tag for partitioning
+    scope: str = ""  # named_scope path, e.g. "block/attn/flash_decode"
+
+    def param(self, key: str, default: Any = None) -> Any:
+        for k, v in self.params:
+            if k == key:
+                return v
+        return default
+
+    @property
+    def size(self) -> int:
+        n = 1
+        for s in self.shape:
+            n *= int(s)
+        return n
+
+    def short(self) -> str:
+        ins = ",".join(f"%{i}" for i in self.inputs)
+        return f"%{self.id} = {self.op}({ins}) {self.dtype}{list(self.shape)}"
+
+
+class Graph:
+    """Append-only SSA tensor dataflow graph."""
+
+    def __init__(self, name: str = "graph") -> None:
+        self.name = name
+        self.nodes: list[Node] = []
+        self.outputs: list[int] = []
+        self._consumers: Optional[dict[int, list[int]]] = None
+
+    # -- construction ------------------------------------------------------
+    def add(
+        self,
+        op: str,
+        inputs: Sequence[int] = (),
+        shape: Sequence[int] = (),
+        dtype: str = "float32",
+        params: Optional[dict] = None,
+        src: str = "",
+        layer: Optional[int] = None,
+        scope: str = "",
+    ) -> int:
+        nid = len(self.nodes)
+        frozen = tuple(sorted((k, _freeze(v)) for k, v in (params or {}).items()))
+        self.nodes.append(
+            Node(
+                id=nid,
+                op=op,
+                inputs=tuple(int(i) for i in inputs),
+                shape=tuple(int(s) for s in shape),
+                dtype=str(dtype),
+                params=frozen,
+                src=src,
+                layer=layer,
+                scope=scope,
+            )
+        )
+        self._consumers = None
+        return nid
+
+    def mark_output(self, *nids: int) -> None:
+        self.outputs.extend(int(n) for n in nids)
+
+    # -- access ------------------------------------------------------------
+    def __len__(self) -> int:
+        return len(self.nodes)
+
+    def __getitem__(self, nid: int) -> Node:
+        return self.nodes[nid]
+
+    def __iter__(self) -> Iterator[Node]:
+        return iter(self.nodes)
+
+    def consumers(self, nid: int) -> list[int]:
+        if self._consumers is None:
+            cons: dict[int, list[int]] = {}
+            for n in self.nodes:
+                for i in n.inputs:
+                    cons.setdefault(i, []).append(n.id)
+            self._consumers = cons
+        return self._consumers.get(nid, [])
+
+    def toposort(self, roots: Optional[Iterable[int]] = None) -> list[int]:
+        """Node ids in topological order (ids are already topological since
+        the graph is append-only SSA, but subsets need filtering)."""
+        if roots is None:
+            return list(range(len(self.nodes)))
+        keep: set[int] = set()
+        stack = list(roots)
+        while stack:
+            nid = stack.pop()
+            if nid in keep:
+                continue
+            keep.add(nid)
+            stack.extend(self.nodes[nid].inputs)
+        return sorted(keep)
+
+    def layers(self) -> dict[Optional[int], list[int]]:
+        """Group node ids by layer tag (None = untagged pre/postamble)."""
+        out: dict[Optional[int], list[int]] = {}
+        for n in self.nodes:
+            out.setdefault(n.layer, []).append(n.id)
+        return out
+
+    # -- structural fingerprint (layer memoization) -------------------------
+    def fingerprint(self, nids: Sequence[int], normalize_slices: bool = False) -> int:
+        """Order-insensitive-to-absolute-id structural hash of a subgraph.
+
+        Node ids are renumbered by position within ``nids``; external inputs
+        are numbered by first use.  Shapes/dtypes/params/ops all contribute,
+        source locations and layer tags do not (two structurally identical
+        layers hash equal — the memoization key of §5.1).
+
+        ``normalize_slices=True`` abstracts the *offsets* of slices taken from
+        external tensors (keeping extents): layer i slicing ``W[i]`` then
+        hashes equal to layer j slicing ``W[j]``.  Callers must separately pin
+        the base<->dist offset alignment (see PartitionedVerifier).
+        """
+        local = {nid: i for i, nid in enumerate(nids)}
+        ext: dict[int, int] = {}
+        sig = []
+        for nid in nids:
+            n = self.nodes[nid]
+            ins = []
+            external_slice = False
+            for i in n.inputs:
+                if i in local:
+                    ins.append(("l", local[i]))
+                else:
+                    if i not in ext:
+                        ext[i] = len(ext)
+                    src = self.nodes[i]
+                    ins.append(("e", ext[i], src.shape, src.dtype))
+                    external_slice = True
+            params = n.params
+            if normalize_slices and n.op == "slice" and external_slice:
+                st = n.param("start_indices")
+                li = n.param("limit_indices")
+                if st is not None and li is not None:
+                    extents = tuple(l - s for s, l in zip(st, li))
+                    params = (("extents", extents), ("strides", n.param("strides")))
+            sig.append((n.op, tuple(ins), n.shape, n.dtype, params))
+        return hash(tuple(sig))
+
+    def slice_offsets(self, nids: Sequence[int]) -> list[tuple]:
+        """Start offsets of external-input slices within a subgraph, in node
+        order (used to pin memoization alignment across graph pairs)."""
+        inside = set(nids)
+        out = []
+        for nid in sorted(nids):
+            n = self.nodes[nid]
+            if n.op == "slice" and n.inputs and n.inputs[0] not in inside:
+                out.append(tuple(n.param("start_indices") or ()))
+        return out
+
+    def pretty(self, max_nodes: int = 80) -> str:
+        lines = [f"graph {self.name} ({len(self.nodes)} nodes)"]
+        for n in self.nodes[:max_nodes]:
+            lines.append("  " + n.short())
+        if len(self.nodes) > max_nodes:
+            lines.append(f"  ... {len(self.nodes) - max_nodes} more")
+        lines.append(f"  outputs: {self.outputs}")
+        return "\n".join(lines)

@@ -1,0 +1,205 @@
+"""Verify the framework's own model parallelization (the launcher gate and
+the paper's Table-2 workload).
+
+``verify_model_tp(arch, tp)`` traces the single-device forward and the
+TP/EP-sharded per-device forward of the SAME model definition and runs the
+Scalify engine over the pair:
+
+  * layers are unrolled under named scopes -> per-layer memoization fires;
+  * inner scans (attention KV chunks, SSD chunk recurrence) are unrolled so
+    the IR is plain dataflow (the paper's setting);
+  * the vocab-parallel embedding verifies through the trusted-template meta
+    rule; the vocab-parallel head through the column-dot rule;
+  * MoE layers use the dense-masked formulation with expert-FFN TP (the
+    capacity-dispatch execution path is data-dependent scatter/gather and is
+    covered by numerical equivalence tests instead — see DESIGN.md
+    §Arch-applicability).
+"""
+from __future__ import annotations
+
+import dataclasses
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import AbstractMesh, PartitionSpec as P
+
+from repro.configs import get_config
+from repro.models import Model
+from repro.parallel.ctx import ParallelCtx
+from repro.parallel.sharding import param_specs
+
+from .relations import DUP, SHARD
+from .verifier import (
+    InputFact,
+    OutputSpec,
+    Report,
+    VerifyOptions,
+    verify_graphs,
+)
+from .trace import trace, trace_sharded
+
+
+def _verify_pspecs(param_shapes, cfg):
+    """param specs for the verification formulation: like execution specs,
+    but MoE experts use FFN-width TP instead of expert parallelism."""
+    specs = param_specs(param_shapes)
+
+    def fix(path, spec, leaf):
+        names = tuple(p.key if hasattr(p, "key") else str(p) for p in path)
+        if len(names) >= 2 and names[-2] == "moe" and names[-1] in ("wg", "wu", "wo"):
+            if names[-1] == "wo":
+                return P(None, None, "model", None)  # (nb, E, F, D): shard F
+            return P(None, None, None, "model")  # (nb, E, D, F): shard F
+        return spec
+
+    return jax.tree_util.tree_map_with_path(
+        lambda pth, sp, lf: fix(pth, sp, lf), specs, param_shapes)
+
+
+def verify_model_tp(
+    arch: str,
+    tp: int = 16,
+    *,
+    smoke: bool = False,
+    batch: int = 1,
+    seq: int = 32,
+    n_layers: Optional[int] = None,
+    options: Optional[VerifyOptions] = None,
+    mutate_dist=None,
+) -> Report:
+    cfg = get_config(arch, smoke=smoke)
+    if n_layers is not None:
+        # round up to a whole block period (hybrids repeat every P layers)
+        per = cfg.block_period
+        n_layers = max(per, (n_layers + per - 1) // per * per)
+        cfg = dataclasses.replace(cfg, n_layers=n_layers)
+    # keep verification traces lean: tiny attention chunks are irrelevant to
+    # graph structure at small seq
+    mesh = AbstractMesh((tp,), ("model",))
+    ctx = ParallelCtx(tp_axis="model", tp_size=tp, ep_axis="model", ep_size=tp)
+    model_s = Model(cfg, ParallelCtx.single(), moe_impl="dense")
+    model_d = Model(cfg, ctx, moe_impl="dense")
+
+    key = jax.random.PRNGKey(0)
+    param_shapes = jax.eval_shape(model_s.init, key)
+    pspecs = _verify_pspecs(param_shapes, cfg)
+    b = {}
+    if cfg.frontend == "vision_patches":
+        seq = max(seq, cfg.frontend_len + 32)
+        b["vision_embeds"] = jax.ShapeDtypeStruct(
+            (batch, cfg.frontend_len, cfg.frontend_dim), model_s.dtype)
+        b["tokens"] = jax.ShapeDtypeStruct((batch, seq - cfg.frontend_len), jnp.int32)
+    elif cfg.frontend == "audio_frames":
+        b["frames"] = jax.ShapeDtypeStruct((batch, seq, cfg.d_model), model_s.dtype)
+    else:
+        b["tokens"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
+    bspecs = jax.tree_util.tree_map(lambda _: P(), b)
+
+    base_fn = lambda p, bb: model_s.forward(p, bb, unroll=True)
+    dist_fn = lambda p, bb: model_d.forward(p, bb, unroll=True)
+
+    gb, b_in, _ = trace(base_fn, param_shapes, b, name=f"{arch}-base")
+    gd, d_in, _ = trace_sharded(
+        dist_fn, mesh, (pspecs, bspecs), P(None, None, "model"),
+        param_shapes, b, name=f"{arch}-dist")
+    if mutate_dist is not None:
+        gd = mutate_dist(gd)
+
+    # input relation registration straight from the sharding rules
+    flat_specs = jax.tree_util.tree_leaves(
+        (pspecs, bspecs), is_leaf=lambda x: isinstance(x, P))
+    facts = []
+    for i, spec in enumerate(flat_specs):
+        dim = None
+        for d_, entry in enumerate(tuple(spec)):
+            names = entry if isinstance(entry, tuple) else (entry,)
+            if "model" in [n for n in names if n]:
+                dim = d_
+        facts.append(
+            InputFact(SHARD if dim is not None else DUP, i, i, -1 if dim is None else dim)
+        )
+    return verify_graphs(
+        gb, gd, size=tp, input_facts=facts, base_inputs=b_in, dist_inputs=d_in,
+        output_specs=[OutputSpec(kind="shard", dim=2)],
+        options=options or VerifyOptions(),
+    )
+
+
+def verify_decode_tp(
+    arch: str,
+    tp: int = 16,
+    *,
+    smoke: bool = False,
+    batch: int = 2,
+    max_len: int = 64,
+    n_layers: Optional[int] = None,
+    options: Optional[VerifyOptions] = None,
+    mutate_dist=None,
+) -> Report:
+    """Verify the TP parallelization of the *serving* step (the paper's own
+    setting is inference graphs): one token against KV/SSM caches sharded
+    over heads, vocab-parallel head output."""
+    import jax.numpy as jnp
+
+    cfg = get_config(arch, smoke=smoke)
+    if n_layers is not None:
+        per = cfg.block_period
+        n_layers = max(per, (n_layers + per - 1) // per * per)
+        cfg = dataclasses.replace(cfg, n_layers=n_layers)
+    if cfg.encoder_only:
+        raise ValueError(f"{arch} is encoder-only: no decode step")
+    mesh = AbstractMesh((tp,), ("model",))
+    ctx = ParallelCtx(tp_axis="model", tp_size=tp, ep_axis="model", ep_size=tp)
+    model_s = Model(cfg, ParallelCtx.single(), moe_impl="dense")
+    model_d = Model(cfg, ctx, moe_impl="dense")
+
+    key = jax.random.PRNGKey(0)
+    param_shapes = jax.eval_shape(model_s.init, key)
+    pspecs = _verify_pspecs(param_shapes, cfg)
+    cache_shapes = jax.eval_shape(lambda: model_s.init_cache(batch, max_len))
+    from repro.parallel.sharding import cache_specs as _cache_specs
+
+    cspecs = _cache_specs(cache_shapes, None)
+    tok = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    base_fn = lambda p, t, c, q: model_s.decode_step(p, t, c, q, unroll=True)
+    dist_fn = lambda p, t, c, q: model_d.decode_step(p, t, c, q, unroll=True)
+    gb, b_in, _ = trace(base_fn, param_shapes, tok, cache_shapes, pos,
+                        name=f"{arch}-decode-base")
+    gd, d_in, _ = trace_sharded(
+        dist_fn, mesh, (pspecs, P(), cspecs, P()),
+        (P(None, "model"), jax.tree_util.tree_map(lambda s: s, cspecs)),
+        param_shapes, tok, cache_shapes, pos, name=f"{arch}-decode-dist")
+    if mutate_dist is not None:
+        gd = mutate_dist(gd)
+
+    flat_specs = jax.tree_util.tree_leaves(
+        (pspecs, P(), cspecs, P()), is_leaf=lambda x: isinstance(x, P))
+    facts = []
+    for i, spec in enumerate(flat_specs):
+        dim = None
+        for d_, entry in enumerate(tuple(spec)):
+            names = entry if isinstance(entry, tuple) else (entry,)
+            if "model" in [n for n in names if n]:
+                dim = d_
+        facts.append(
+            InputFact(SHARD if dim is not None else DUP, i, i,
+                      -1 if dim is None else dim))
+
+    # outputs: logits sharded over vocab (dim 1) + every cache leaf sharded
+    # on its head dim (matching the input cache specs)
+    out_specs = [OutputSpec(kind="shard", dim=1)]
+    for spec in jax.tree_util.tree_leaves(cspecs, is_leaf=lambda x: isinstance(x, P)):
+        dim = None
+        for d_, entry in enumerate(tuple(spec)):
+            names = entry if isinstance(entry, tuple) else (entry,)
+            if "model" in [n for n in names if n]:
+                dim = d_
+        out_specs.append(OutputSpec(kind="shard" if dim is not None else "dup",
+                                    dim=-1 if dim is None else dim))
+    return verify_graphs(
+        gb, gd, size=tp, input_facts=facts, base_inputs=b_in, dist_inputs=d_in,
+        output_specs=out_specs, options=options or VerifyOptions(),
+    )

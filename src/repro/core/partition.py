@@ -1,0 +1,217 @@
+"""Two-step graph partitioning, parallel rewriting and layer memoization
+(paper §5.1, Algorithm 1).
+
+Layers come from ``layer`` tags assigned at trace time (``jax.named_scope
+("layer<i>")`` in the model code — the natural cut points the paper uses).
+Within a layer, nodes are grouped into **topological stages**; independent
+subtopologies of a stage are rewritten on a thread pool (``T1..Tn`` of
+Fig. 5).  Structurally identical layer pairs with identical input-relation
+signatures are **memoized**: their facts are replayed onto the new layer's
+nodes without re-running rule matching — the dominant cost saving for deep
+models (paper Fig. 12).
+"""
+from __future__ import annotations
+
+import concurrent.futures as _fut
+from dataclasses import dataclass, replace
+from typing import Optional, Sequence
+
+from .ir import Graph
+from .relations import Fact, RelStore
+from .rules import Propagator
+
+
+@dataclass
+class LayerPlan:
+    key: Optional[int]  # layer tag (None = preamble/postamble pseudo-layers)
+    base_nodes: list[int]
+    dist_nodes: list[int]
+
+
+def partition_layers(base: Graph, dist: Graph) -> list[LayerPlan]:
+    """Partition both graphs along layer boundaries, preserving topological
+    order: preamble (untagged before the first tagged node), layers by tag,
+    postamble (untagged after)."""
+
+    def split(g: Graph) -> dict:
+        tagged = [n.id for n in g if n.layer is not None]
+        first = tagged[0] if tagged else len(g.nodes)
+        last = tagged[-1] if tagged else -1
+        buckets: dict = {"pre": [], "post": []}
+        for n in g:
+            if n.layer is not None:
+                buckets.setdefault(n.layer, []).append(n.id)
+            elif n.id < first:
+                buckets["pre"].append(n.id)
+            elif n.id > last:
+                buckets["post"].append(n.id)
+            else:
+                # untagged interior node: attach to the previous tagged layer
+                prev = max((t for t in buckets if isinstance(t, int)), default="pre")
+                buckets.setdefault(prev, []).append(n.id)
+        return buckets
+
+    b, d = split(base), split(dist)
+    keys = sorted({k for k in list(b) + list(d) if isinstance(k, int)})
+    plans = [LayerPlan("pre", b.get("pre", []), d.get("pre", []))]
+    plans += [LayerPlan(k, b.get(k, []), d.get(k, [])) for k in keys]
+    plans.append(LayerPlan("post", b.get("post", []), d.get("post", [])))
+    return plans
+
+
+def topological_stages(g: Graph, nids: Sequence[int]) -> list[list[int]]:
+    """Split a subgraph into stages: each stage's nodes depend only on nodes
+    in earlier stages or outside the subgraph (boundary nodes, Fig. 5)."""
+    inside = set(nids)
+    depth: dict[int, int] = {}
+    for nid in sorted(nids):
+        d = 0
+        for i in g[nid].inputs:
+            if i in inside:
+                d = max(d, depth[i] + 1)
+        depth[nid] = d
+    stages: dict[int, list[int]] = {}
+    for nid, d in depth.items():
+        stages.setdefault(d, []).append(nid)
+    return [sorted(stages[k]) for k in sorted(stages)]
+
+
+def stage_topologies(g: Graph, stage: Sequence[int]) -> list[list[int]]:
+    """Independent subtopologies within a stage (parallel rewriting units).
+
+    Stage nodes have no intra-stage edges by construction, so group them by
+    shared *inputs* to keep cache locality; singleton groups otherwise."""
+    groups: dict[int, list[int]] = {}
+    for nid in stage:
+        key = g[nid].inputs[0] if g[nid].inputs else nid
+        groups.setdefault(key, []).append(nid)
+    return list(groups.values())
+
+
+@dataclass
+class MemoStats:
+    layers: int = 0
+    memo_hits: int = 0
+    facts_replayed: int = 0
+
+
+class PartitionedVerifier:
+    """Runs Algorithm 1: per-layer-pair registration, staged parallel
+    rewriting, memoized replay for repeated layers."""
+
+    def __init__(self, prop: Propagator, parallel_workers: int = 0, memoize: bool = True):
+        self.prop = prop
+        self.workers = parallel_workers
+        self.memoize = memoize
+        self.stats = MemoStats()
+        # memo: fingerprint -> (base_nodes, dist_nodes, [fact templates])
+        self._memo: dict[tuple, tuple[list[int], list[int], list[Fact]]] = {}
+
+    # -- signatures -----------------------------------------------------------
+    def _ext_inputs(self, g: Graph, nids: Sequence[int]) -> list[int]:
+        inside = set(nids)
+        ext, seen = [], set()
+        for nid in sorted(nids):
+            for i in g[nid].inputs:
+                if i not in inside and i not in seen:
+                    seen.add(i)
+                    ext.append(i)
+        return ext
+
+    def _input_signature(self, plan: LayerPlan) -> Optional[tuple]:
+        """Signature of incoming facts on the layer's external dist inputs,
+        with baseline nodes encoded positionally (ext-input index)."""
+        base_ext = self._ext_inputs(self.prop.base, plan.base_nodes)
+        dist_ext = self._ext_inputs(self.prop.dist, plan.dist_nodes)
+        bpos = {b: i for i, b in enumerate(base_ext)}
+        sig = []
+        for j, d in enumerate(dist_ext):
+            for f in self.prop.store.facts(d):
+                if f.base in bpos:
+                    sig.append(
+                        (j, bpos[f.base], f.kind, f.reduce_op, f.layout.atoms,
+                         f.layout.perm, f.layout.dst_groups, f.dim, f.nchunk, f.index)
+                    )
+        return tuple(sorted(sig))
+
+    def _fingerprint(self, plan: LayerPlan) -> tuple:
+        """Memoization key: normalized structural hashes of both layer
+        subgraphs + incoming-fact signature + the base<->dist slice-offset
+        *deltas* (so layer i slicing W[i] on both sides matches layer j
+        slicing W[j], but never W[i] vs W[j])."""
+        b_off = self.prop.base.slice_offsets(plan.base_nodes)
+        d_off = self.prop.dist.slice_offsets(plan.dist_nodes)
+        if len(b_off) == len(d_off):
+            delta = tuple(
+                tuple(x - y for x, y in zip(d, b)) for b, d in zip(b_off, d_off)
+            )
+        else:
+            delta = (tuple(b_off), tuple(d_off))  # unmatched: raw (no false merge)
+        return (
+            self.prop.base.fingerprint(sorted(plan.base_nodes), normalize_slices=True),
+            self.prop.dist.fingerprint(sorted(plan.dist_nodes), normalize_slices=True),
+            self._input_signature(plan),
+            delta,
+        )
+
+    # -- replay ------------------------------------------------------------------
+    def _replay(self, memo, plan: LayerPlan) -> None:
+        src_b, src_d, facts = memo
+        bmap = self._correspondence(self.prop.base, src_b, plan.base_nodes)
+        dmap = self._correspondence(self.prop.dist, src_d, plan.dist_nodes)
+        for f in facts:
+            nb, nd = bmap.get(f.base), dmap.get(f.dist)
+            if nb is not None and nd is not None:
+                self.prop.store.add(replace(f, base=nb, dist=nd))
+                self.stats.facts_replayed += 1
+
+    def _correspondence(self, g: Graph, src: Sequence[int], dst: Sequence[int]) -> dict[int, int]:
+        m = dict(zip(sorted(src), sorted(dst)))
+        # external inputs correspond by first-use order
+        for es, ed in zip(self._ext_inputs(g, src), self._ext_inputs(g, dst)):
+            m[es] = ed
+        return m
+
+    # -- main loop --------------------------------------------------------------
+    def run(self) -> MemoStats:
+        plans = partition_layers(self.prop.base, self.prop.dist)
+        for plan in plans:
+            if not plan.dist_nodes:
+                continue
+            self.stats.layers += 1
+            fp = self._fingerprint(plan) if (self.memoize and isinstance(plan.key, int)) else None
+            if fp is not None and fp in self._memo:
+                self.stats.memo_hits += 1
+                self._replay(self._memo[fp], plan)
+                continue
+            before_keys = {
+                k for k, v in self.prop.store.by_dist.items() if v and k in set(plan.dist_nodes)
+            }
+            self._rewrite_layer(plan)
+            if fp is not None:
+                inside_d = set(plan.dist_nodes)
+                inside_b = set(plan.base_nodes)
+                ext_b = set(self._ext_inputs(self.prop.base, plan.base_nodes))
+                facts = [
+                    f
+                    for d in plan.dist_nodes
+                    for f in self.prop.store.facts(d)
+                    if f.base in inside_b or f.base in ext_b
+                ]
+                self._memo[fp] = (list(plan.base_nodes), list(plan.dist_nodes), facts)
+            del before_keys
+        return self.stats
+
+    def _rewrite_layer(self, plan: LayerPlan) -> None:
+        stages = topological_stages(self.prop.dist, plan.dist_nodes)
+        for _round in range(3):  # fixpoint rounds within the layer
+            before = self.prop.store.num_derived
+            for stage in stages:
+                if self.workers > 1 and len(stage) > 8:
+                    topos = stage_topologies(self.prop.dist, stage)
+                    with _fut.ThreadPoolExecutor(max_workers=self.workers) as pool:
+                        list(pool.map(lambda t: self.prop.run(t, max_passes=1), topos))
+                else:
+                    self.prop.run(stage, max_passes=1)
+            if self.prop.store.num_derived == before:
+                break

@@ -1,0 +1,151 @@
+"""Relational facts between baseline and distributed tensors (paper §5.2.2).
+
+Facts follow Figure 7's relational language.  Every fact relates one baseline
+value ``B`` to one per-device distributed value ``D`` replicated/sharded over
+``size`` devices along one mesh axis (the *verification axis*; multi-axis
+meshes are verified one axis at a time, matching the paper's per-technique
+verification).
+
+Semantics (``L`` = ``fact.layout``, a :class:`~repro.core.bijection.Layout`):
+
+=============  ==================================================================
+kind           meaning
+=============  ==================================================================
+``dup``        ``D_r = L(B)`` for every rank r              (paper: duplicate/layout)
+``shard``      ``stack_r(D_r) = L(B)`` with the stacked device axis as dst dim 0
+               (paper: sharded, generalized with a layout)
+``partial``    ``reduce_r(D_r, reduce_op) = L(B)``          (paper: partial)
+``slicegrp``   ``D_r = chunk[r * n + index] of L(B)`` along dst dim ``dim`` split
+               into ``size * n`` chunks                       (paper: slice)
+``loopred``    ``D_r = reduce(op, { chunk[r*n+i] : i in idxset })`` — the running
+               accumulation of an unrolled loop               (paper: loop_red_D)
+=============  ==================================================================
+
+The store also records **diagnostics**: near-miss rule firings (a join that
+consumed a ``partial`` and a non-partial, an all-reduce over a ``dup``, a
+layout mismatch with its synthesized repair bijection, a dtype mismatch).
+These power bug localization (§5.3) and bug categorization (§7.3).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field, replace
+from typing import Iterable, Optional
+
+from .bijection import Layout
+
+DUP = "dup"
+SHARD = "shard"
+PARTIAL = "partial"
+SLICEGRP = "slicegrp"
+LOOPRED = "loopred"
+
+
+@dataclass(frozen=True)
+class Fact:
+    kind: str
+    base: int  # baseline node id
+    dist: int  # distributed node id
+    size: int  # device count c along the verification axis
+    layout: Layout
+    reduce_op: str = ""  # partial/loopred: add|max|min
+    dim: int = -1  # slicegrp/loopred: chunked dst dim of L(B)
+    nchunk: int = 0  # slicegrp/loopred: chunks per rank (n)
+    index: int = -1  # slicegrp: local chunk index i
+    idxset: frozenset = frozenset()  # loopred: accumulated local indices
+
+    def key(self) -> tuple:
+        return (
+            self.kind,
+            self.base,
+            self.dist,
+            self.size,
+            self.layout.atoms,
+            self.layout.perm,
+            self.layout.dst_groups,
+            self.reduce_op,
+            self.dim,
+            self.nchunk,
+            self.index,
+            self.idxset,
+        )
+
+    @property
+    def clean(self) -> bool:
+        """Identity layout — the fully aligned form (unit atoms ignored)."""
+        lay = self.layout
+        if self.kind == SHARD:
+            # stacked layout: device atom (size c, + unit atoms) at dst dim 0,
+            # remaining non-unit atoms in ascending order
+            if not lay.dst_groups:
+                return False
+            g0 = lay.dst_groups[0]
+            head = [p for p in lay.perm[:g0] if lay.atoms[p] != 1]
+            if len(head) != 1 or lay.atoms[head[0]] != self.size:
+                return False
+            rest = [p for p in lay.perm[g0:] if lay.atoms[p] != 1]
+            return rest == sorted(rest)
+        nonunit = [p for p in lay.perm if lay.atoms[p] != 1]
+        return nonunit == sorted(nonunit) and lay.dst_shape == lay.src_shape
+
+    def short(self) -> str:
+        extra = ""
+        if self.kind == PARTIAL:
+            extra = f",{self.reduce_op}"
+        if self.kind in (SLICEGRP, LOOPRED):
+            extra = f",dim={self.dim},n={self.nchunk},i={self.index},S={sorted(self.idxset)}"
+        lay = "" if self.layout.is_identity else f",L={self.layout}"
+        return f"{self.kind}(b%{self.base},d%{self.dist},c={self.size}{extra}{lay})"
+
+
+@dataclass
+class Diagnostic:
+    """A near-miss explanation attached to a distributed node."""
+
+    dist: int
+    category: str  # e.g. missing_all_reduce / redundant_all_reduce /
+    #                  wrong_replica_groups / precision_mismatch /
+    #                  layout_mismatch / wrong_axis_split
+    detail: str
+    repair: Optional[list] = None  # synthesized bijection ops if applicable
+
+
+class RelStore:
+    def __init__(self) -> None:
+        self.by_dist: dict[int, list[Fact]] = {}
+        self.by_base: dict[int, list[Fact]] = {}
+        self._seen: set[tuple] = set()
+        self.diagnostics: list[Diagnostic] = []
+        self.num_derived = 0
+        # scopes/nodes verified wholesale by a trusted meta rule: their
+        # internal nodes are exempt from frontier localization
+        self.covered_scopes: set[str] = set()
+        self.covered_nodes: set[int] = set()
+
+    def add(self, fact: Fact) -> bool:
+        k = fact.key()
+        if k in self._seen:
+            return False
+        self._seen.add(k)
+        self.by_dist.setdefault(fact.dist, []).append(fact)
+        self.by_base.setdefault(fact.base, []).append(fact)
+        self.num_derived += 1
+        return True
+
+    def facts(self, dist: int) -> list[Fact]:
+        return self.by_dist.get(dist, [])
+
+    def facts_for_base(self, base: int) -> list[Fact]:
+        return self.by_base.get(base, [])
+
+    def verified(self, dist: int) -> bool:
+        return bool(self.by_dist.get(dist))
+
+    def diag(self, dist: int, category: str, detail: str, repair=None) -> None:
+        self.diagnostics.append(Diagnostic(dist, category, detail, repair))
+
+    def merge_from(self, other: "RelStore", base_map: dict[int, int], dist_map: dict[int, int]) -> None:
+        """Import facts from a memoized layer verification, renaming node ids."""
+        for facts in other.by_dist.values():
+            for f in facts:
+                if f.base in base_map and f.dist in dist_map:
+                    self.add(replace(f, base=base_map[f.base], dist=dist_map[f.dist]))

@@ -1,0 +1,1302 @@
+"""Datalog-style relation propagation rules (paper §5.2.2, Table 1).
+
+The :class:`Propagator` walks the distributed graph in topological order and,
+for every node, fires the rule templates matching its op against the facts
+already derived for its inputs.  Rules are polymorphic over op families
+(elementwise / layout / dot / reduce / collective / slice), exactly as the
+paper's "25 meta rules" are.  Derived facts feed a worklist until fixpoint
+(semi-naive evaluation); every fact addition also performs **baseline layout
+closure**: if ``fact(b, d)`` holds and the baseline applies ``z = op_layout(b)``,
+then ``fact(z, d)`` holds with the layout composed with ``op_layout^{-1}``
+(this is how Figure 6's interleaved transpose/reshape paths align without
+enumerating layout sequences).
+
+Soundness: every rule is a theorem about SPMD semantics (several are
+property-tested against a numpy SPMD simulator in
+``tests/test_rules_simulator.py``).  When no rule fires, no fact is derived —
+the node stays unverified; the verifier never claims equivalence it cannot
+justify.
+"""
+from __future__ import annotations
+
+from dataclasses import replace
+from typing import Callable, Iterable, Optional, Sequence
+
+from .bijection import Layout, NotSplitMerge, infer_bijection
+from .egraph import GraphEGraph
+from .ir import COMMUTATIVE, ELEMENTWISE, Graph, Node
+from .relations import DUP, LOOPRED, PARTIAL, SHARD, SLICEGRP, Fact, RelStore
+
+# elementwise ops that are linear (distribute over add-partials)
+LINEAR_UNARY = frozenset({"neg"})
+# ops that preserve max-partials elementwise (monotone & distributing): none by default
+
+
+def _move_dim(rank: int, src: int, dst: int) -> tuple[int, ...]:
+    dims = [i for i in range(rank) if i != src]
+    dims.insert(dst, src)
+    return tuple(dims)
+
+
+def _shard_stack_layout(shape: Sequence[int], dim: int, c: int) -> Layout:
+    """Layout mapping a global tensor to its rank-stacked shards:
+    ``B(shape) -> (c, *local)`` with dim ``dim`` chunked by ``c``."""
+    shape = tuple(int(s) for s in shape)
+    if shape[dim] % c != 0:
+        raise NotSplitMerge(f"dim {dim} of {shape} not divisible by {c}")
+    lay = Layout.identity(shape)
+    split = shape[:dim] + (c, shape[dim] // c) + shape[dim + 1 :]
+    lay = lay.then_reshape(split)
+    return lay.then_transpose(_move_dim(len(split), dim, 0))
+
+
+
+
+def _dup_id(f: Fact) -> bool:
+    """Dup fact whose layout is identity up to unit-dim bookkeeping."""
+    return (f.layout.effectively_identity
+            and f.layout.src_shape == f.layout.dst_shape)
+
+class Propagator:
+    def __init__(
+        self,
+        base: Graph,
+        dist: Graph,
+        size: int,
+        store: Optional[RelStore] = None,
+        base_eg: Optional[GraphEGraph] = None,
+        axis: str = "model",
+    ) -> None:
+        self.base = base
+        self.dist = dist
+        self.size = size
+        self.axis = axis
+        self.store = store or RelStore()
+        self.base_eg = base_eg or GraphEGraph(base, tag="base")
+        self._loopred_base_cache: dict[tuple, Optional[int]] = {}
+        self._ec_consumers: Optional[dict[int, list[int]]] = None
+        self.handlers: dict[str, Callable[[Node], None]] = {}
+        self._install_handlers()
+
+    # ------------------------------------------------------------------ api
+    def register_input(self, fact: Fact) -> None:
+        self.emit(fact)
+
+    def register_dup(self, b: int, d: int) -> None:
+        self.emit(Fact(DUP, b, d, self.size, Layout.identity(self.base[b].shape)))
+
+    def register_shard(self, b: int, d: int, dim: int) -> None:
+        lay = _shard_stack_layout(self.base[b].shape, dim, self.size)
+        self.emit(Fact(SHARD, b, d, self.size, lay))
+
+    def run(self, nodes: Optional[Iterable[int]] = None, max_passes: int = 30) -> None:
+        todo = sorted(nodes) if nodes is not None else list(range(len(self.dist.nodes)))
+        for _ in range(max_passes):
+            before = self.store.num_derived
+            for nid in todo:
+                node = self.dist[nid]
+                handler = self.handlers.get(node.op, self._generic)
+                handler(node)
+            self._apply_meta_rules(todo)
+            if self.store.num_derived == before:
+                break
+
+    # -- scope meta rules (vendor-kernel granularity, paper §5.1) ----------------
+    def _apply_meta_rules(self, todo) -> None:
+        """Match named-scope regions against trusted templates.  The template
+        is the *same function* the framework uses to generate the region
+        (parallel/collectives.py); structural identity is checked by
+        fingerprint, so any mutation of the region stays unverified."""
+        # meta rules scan the whole graph (regions straddle partition stages);
+        # the group scan is cached — the graph is static
+        del todo
+        if not hasattr(self, "_meta_groups"):
+            groups: dict[str, list[int]] = {}
+            for n in self.dist:
+                if "vp_embed" in n.scope.split("/"):
+                    groups.setdefault(n.scope, []).append(n.id)
+            self._meta_groups = []
+            for scope, nids in groups.items():
+                # scope tags are lost inside library internals (jnp.take's
+                # custom_jvp); the region is the contiguous trace span
+                lo, hi = min(nids), max(nids)
+                span = [
+                    i for i in range(lo, hi + 1)
+                    if self.dist[i].op not in ("input", "param")
+                ]
+                self._meta_groups.append((span, scope))
+        for span, scope in self._meta_groups:
+            self._meta_vp_embed(span, scope)
+
+    def _meta_vp_embed(self, nids: list[int], scope: str = "vp_embed") -> None:
+        g = self.dist
+        inside = set(nids)
+        # region output: the all_reduce whose consumers escape the region
+        outs = [nid for nid in nids
+                if g[nid].op == "all_reduce"
+                and (any(c not in inside for c in g.consumers(nid)) or nid in g.outputs)]
+        if len(outs) != 1 or self.store.verified(outs[0]):
+            return
+        out = outs[0]
+        # external inputs: the sharded table + the replicated ids
+        ext = []
+        for nid in nids:
+            for i in g[nid].inputs:
+                if i not in inside and i not in ext:
+                    ext.append(i)
+        table = ids = None
+        tfact = ifact = None
+        for e in ext:
+            for f in self.store.facts(e):
+                if f.kind == SHARD and self._shard_src_dim(f) == 0 and len(g[e].shape) == 2:
+                    table, tfact = e, f
+                elif f.kind == DUP and f.layout.is_identity and "int" in g[e].dtype:
+                    ids, ifact = e, f
+        if table is None or ids is None:
+            return
+        # template fingerprint: trace the trusted generator with these shapes
+        if not self._vp_embed_template_ok(nids, g[table].shape, g[ids].shape, g[table].dtype):
+            self.store.diag(
+                out, "layout_mismatch",
+                "vp_embed region deviates from the trusted template")
+            return
+        # baseline counterpart: gather(full_table, idx) with idx derived from
+        # ids through layout-only ops (jnp.take inserts a broadcast)
+        def derives_from(nid: int, target: int, depth: int = 8) -> bool:
+            if self.base_eg.same(nid, target):
+                return True
+            if depth == 0:
+                return False
+            n = self.base[nid]
+            # jnp.take inserts clip (max/min against consts) + broadcast; all
+            # value-preserving for in-range token ids on the trusted baseline
+            if n.op in ("broadcast", "reshape", "transpose", "convert", "max",
+                        "min", "clamp", "select", "add", "lt", "ge"):
+                return any(derives_from(i, target, depth - 1) for i in n.inputs)
+            return False
+
+        for zid in self.base.consumers(tfact.base):
+            z = self.base[zid]
+            if z.op == "gather" and len(z.inputs) == 2 and derives_from(
+                    z.inputs[1], ifact.base) and z.dtype == g[out].dtype:
+                self.emit(Fact(DUP, zid, out, self.size, Layout.identity(z.shape)))
+                self.store.covered_scopes.add(scope)
+                self.store.covered_nodes.update(nids)
+                return
+
+    _vp_embed_templates: dict = {}
+
+    def _vp_embed_template_ok(self, nids, table_shape, ids_shape, dtype) -> bool:
+        key = (tuple(table_shape), tuple(ids_shape), dtype, self.size)
+        if key not in self._vp_embed_templates:
+            import jax
+            import jax.numpy as jnp
+            from jax.sharding import AbstractMesh, PartitionSpec as P
+
+            from repro.parallel.collectives import vp_embed
+
+            from .trace import trace_sharded
+
+            mesh = AbstractMesh((self.size,), (self.axis,))
+            tbl = jax.ShapeDtypeStruct((table_shape[0] * self.size, table_shape[1]),
+                                       dtype)
+            idv = jax.ShapeDtypeStruct(tuple(ids_shape), jnp.int32)
+            gt, t_in, _ = trace_sharded(
+                lambda t, i: vp_embed(t, i, self.axis), mesh,
+                (P(self.axis, None), P()), P(), tbl, idv)
+            body = [n.id for n in gt if n.op not in ("input", "param", "const")]
+            self._vp_embed_templates[key] = gt.fingerprint(sorted(body),
+                                                           normalize_slices=True)
+        region_fp = self.dist.fingerprint(
+            sorted(n for n in nids if self.dist[n].op not in ("const",)),
+            normalize_slices=True)
+        # consts participate as ext leaves in both fingerprints via inputs
+        tmpl = self._vp_embed_templates[key]
+        if region_fp == tmpl:
+            return True
+        # fall back: compare including consts on both sides
+        return False
+
+    # ------------------------------------------------------------- emission
+    def emit(self, fact: Fact, _depth: int = 0) -> None:
+        if not self.store.add(fact) or _depth > 8:
+            return
+        # baseline layout closure: fact(b, d) and z = layout_op(b)  =>  fact(z, d)
+        for zid in self.base.consumers(fact.base):
+            z = self.base[zid]
+            if (z.op == "broadcast" and fact.kind == DUP
+                    and fact.layout.effectively_identity):
+                # baseline-only broadcast of a replicated value: if it scales
+                # exactly one degenerate dim by c, the (identical) per-device
+                # values stack into it -> shard fact; equal shapes -> dup.
+                dshape = self.dist[fact.dist].shape
+                if len(z.shape) == len(dshape):
+                    diff = [k for k in range(len(dshape)) if z.shape[k] != dshape[k]]
+                    if not diff:
+                        self.emit(Fact(DUP, zid, fact.dist, self.size,
+                                       Layout.identity(z.shape)), _depth + 1)
+                    elif (len(diff) == 1 and dshape[diff[0]] == 1
+                          and z.shape[diff[0]] == self.size):
+                        try:
+                            lay = _shard_stack_layout(z.shape, diff[0], self.size)
+                        except NotSplitMerge:
+                            continue
+                        self.emit(Fact(SHARD, zid, fact.dist, self.size, lay),
+                                  _depth + 1)
+                continue
+            if z.op not in ("reshape", "transpose"):
+                continue
+            try:
+                op_lay = Layout.identity(self.base[fact.base].shape)
+                if z.op == "reshape":
+                    op_lay = op_lay.then_reshape(z.shape)
+                else:
+                    op_lay = op_lay.then_transpose(z.param("permutation"))
+                new_lay = op_lay.inverse().compose(fact.layout)
+            except (NotSplitMerge, ValueError):
+                continue
+            self.emit(replace(fact, base=zid, layout=new_lay), _depth + 1)
+
+    # --------------------------------------------------------- base matching
+    def _class_consumers(self, b: int) -> list[int]:
+        """Consumers of every baseline node congruent to ``b`` (e.g. all
+        copies of the same constant share an eclass)."""
+        ec = self.base_eg.cls(b)
+        if self._ec_consumers is None:
+            self._ec_consumers = {}
+            for n in self.base:
+                for i in n.inputs:
+                    self._ec_consumers.setdefault(self.base_eg.cls(i), []).append(n.id)
+        return self._ec_consumers.get(ec, [])
+
+    def _base_candidates(
+        self, op: str, b_inputs: Sequence[int], params: Optional[tuple] = None,
+        layer=None,
+    ) -> list[Node]:
+        """Baseline nodes ``z = op(b_inputs...)`` (inputs matched up to
+        e-graph congruence; commutative ops also match swapped).  ``layer``
+        restricts candidates to the same layer tag — a pure optimization:
+        baseline/distributed layer numbering is aligned by construction, and
+        merged-constant eclasses otherwise make this scan O(layers)."""
+        out = []
+        for zid in self._class_consumers(b_inputs[0]):
+            z = self.base[zid]
+            if z.op != op or len(z.inputs) != len(b_inputs):
+                continue
+            if layer is not None and z.layer is not None and z.layer != layer:
+                continue
+            if params is not None and z.params != params:
+                continue
+            ok = all(self.base_eg.same(zi, bi) for zi, bi in zip(z.inputs, b_inputs))
+            if not ok and op in COMMUTATIVE and len(b_inputs) == 2:
+                ok = self.base_eg.same(z.inputs[0], b_inputs[1]) and self.base_eg.same(
+                    z.inputs[1], b_inputs[0]
+                )
+            if ok:
+                out.append(z)
+        return out
+
+    def _dtype_ok(self, z: Node, d: Node) -> bool:
+        if z.dtype != d.dtype:
+            self.store.diag(
+                d.id,
+                "precision_mismatch",
+                f"baseline {z.short()} is {z.dtype} but distributed {d.short()} is {d.dtype}",
+            )
+            return False
+        return True
+
+    # ----------------------------------------------------------- handlers
+    def _install_handlers(self) -> None:
+        h = self.handlers
+        for op in ELEMENTWISE:
+            h[op] = self._elementwise
+        h["reshape"] = self._layout_op
+        h["transpose"] = self._layout_op
+        h["convert"] = self._convert
+        h["broadcast"] = self._broadcast
+        h["dot"] = self._dot
+        for op in ("reduce_sum", "reduce_max", "reduce_min", "reduce_prod"):
+            h[op] = self._reduce
+        h["all_reduce"] = self._all_reduce
+        h["all_gather"] = self._all_gather
+        h["reduce_scatter"] = self._reduce_scatter
+        h["all_to_all"] = self._all_to_all
+        h["slice"] = self._slice
+        h["concat"] = self._concat
+        h["dynamic_slice"] = self._dynamic_sliceish
+        h["dynamic_update_slice"] = self._dynamic_sliceish
+        h["gather"] = self._generic
+        h["scatter"] = self._generic
+        h["pad"] = self._pad
+        h["iota"] = self._iota
+        h["cumsum"] = self._axis_op
+        h["rev"] = self._axis_op
+        h["input"] = self._noop
+        h["param"] = self._noop
+        h["const"] = self._const
+        h["axis_index"] = self._noop
+        h["ppermute"] = self._noop
+
+    def _noop(self, d: Node) -> None:
+        return
+
+    def _iota(self, d: Node) -> None:
+        """iota is a pure function of (shape, dtype, params): congruent iotas
+        in both graphs are duplicates (layer-filtered: cross-layer pairings
+        are redundant and blow up the join-combo search)."""
+        for b in self.base:
+            if (b.op == "iota" and b.shape == d.shape and b.dtype == d.dtype
+                    and b.params == d.params):
+                if d.layer is not None and b.layer is not None and b.layer != d.layer:
+                    continue
+                self.emit(Fact(DUP, b.id, d.id, self.size, Layout.identity(b.shape)))
+
+    def _pad(self, d: Node) -> None:
+        """pad: dup via congruence; shard preserved when the sharded dim is
+        not padded (same padding config on the baseline candidate)."""
+        self._generic(d)
+        pc = d.param("padding_config")
+        for f in self.store.facts(d.inputs[0]):
+            if f.kind != SHARD:
+                continue
+            k = self._shard_src_dim(f)
+            if k is None:
+                continue
+            if pc is not None and k < len(pc) and tuple(pc[k]) != (0, 0, 0):
+                continue
+            val_facts = self.store.facts(d.inputs[1]) if len(d.inputs) > 1 else [None]
+            for vf in val_facts[:4] or [None]:
+                b_ins = [f.base] + ([vf.base] if vf else [])
+                for z in self._base_candidates(d.op, b_ins, d.params):
+                    if not self._dtype_ok(z, d):
+                        continue
+                    try:
+                        lay = _shard_stack_layout(z.shape, k, self.size)
+                    except NotSplitMerge:
+                        continue
+                    self.emit(Fact(SHARD, z.id, d.id, self.size, lay))
+
+    def _axis_op(self, d: Node) -> None:
+        """Ops acting along one axis (cumsum/rev): propagate dup facts via
+        congruence, and shard facts when the op axis is not the sharded dim."""
+        self._generic(d)
+        ax = d.param("axis")
+        if ax is None:
+            return
+        for f in self.store.facts(d.inputs[0]):
+            if f.kind != SHARD:
+                continue
+            k = self._shard_src_dim(f)
+            if k is None or k == ax:
+                continue
+            for z in self._base_candidates(d.op, [f.base], d.params, layer=d.layer):
+                if self._dtype_ok(z, d):
+                    try:
+                        lay = _shard_stack_layout(z.shape, k, self.size)
+                    except NotSplitMerge:
+                        continue
+                    self.emit(Fact(SHARD, z.id, d.id, self.size, lay))
+
+    def _const(self, d: Node) -> None:
+        # constants with identical payload hash in both graphs: congruent leaf
+        val = d.param("value_hash")
+        if val is None:
+            return
+        for b in self.base:
+            if b.op == "const" and b.param("value_hash") == val and b.shape == d.shape and b.dtype == d.dtype:
+                if d.layer is not None and b.layer is not None and b.layer != d.layer:
+                    continue
+                self.emit(Fact(DUP, b.id, d.id, self.size, Layout.identity(b.shape)))
+                break  # congruent consts share an eclass: one pairing suffices
+
+    # -- generic congruence rule: dup-in/dup-out for any op -------------------
+    def _generic(self, d: Node) -> None:
+        if not d.inputs:
+            return
+        fact_lists = [self.store.facts(i) for i in d.inputs]
+        if not all(fact_lists):
+            return
+        # all inputs dup with (effectively) identity layout -> congruent baseline
+        choices = []
+        for fl in fact_lists:
+            pick = [f for f in fl if f.kind == DUP and f.layout.effectively_identity]
+            if not pick:
+                return
+            choices.append(pick)
+        import itertools
+
+        for combo in itertools.product(*[c[:4] for c in choices]):
+            b_inputs = [f.base for f in combo]
+            for z in self._base_candidates(d.op, b_inputs, d.params, layer=d.layer):
+                if z.shape == d.shape and self._dtype_ok(z, d):
+                    self.emit(Fact(DUP, z.id, d.id, self.size, Layout.identity(z.shape)))
+
+    # -- elementwise -----------------------------------------------------------
+    def _elementwise(self, d: Node) -> None:
+        n = len(d.inputs)
+        if n == 1:
+            self._elementwise_unary(d)
+        elif n >= 2:
+            self._elementwise_nary(d)
+
+    def _elementwise_unary(self, d: Node) -> None:
+        x = d.inputs[0]
+        for f in self.store.facts(x):
+            if f.kind in (DUP, SHARD, SLICEGRP):
+                for z in self._base_candidates(d.op, [f.base], d.params, layer=d.layer):
+                    if self._dtype_ok(z, d):
+                        self.emit(replace(f, base=z.id, dist=d.id))
+            elif f.kind == PARTIAL and (d.op in LINEAR_UNARY and f.reduce_op == "add"):
+                for z in self._base_candidates(d.op, [f.base], d.params, layer=d.layer):
+                    if self._dtype_ok(z, d):
+                        self.emit(replace(f, base=z.id, dist=d.id))
+
+    def _layouts_joinable(self, f1: Fact, f2: Fact) -> bool:
+        try:
+            return f1.layout.equivalent(f2.layout)
+        except ValueError:
+            return False
+
+    def _elementwise_nary(self, d: Node) -> None:
+        import itertools
+
+        fls = [self.store.facts(i) for i in d.inputs]
+        if not all(fls):
+            self._diagnose_join(d, fls)
+            return
+        for combo in itertools.product(*[fl[:6] for fl in fls]):
+            self._try_elementwise_combo(d, combo)
+        self._diagnose_join(d, fls)
+
+    def _try_elementwise_combo(self, d: Node, combo: Sequence[Fact]) -> None:
+        kinds = {f.kind for f in combo}
+        f0 = combo[0]
+        b_inputs = [f.base for f in combo]
+        if kinds == {DUP}:
+            # effectively-identity dups (unit-dim moves only) broadcast freely
+            all_id = all(f.layout.effectively_identity for f in combo)
+            if not all_id and not all(self._layouts_joinable(f0, f) for f in combo[1:]):
+                self._diag_layout(d, combo)
+                return
+            for z in self._base_candidates(d.op, b_inputs, d.params, layer=d.layer):
+                if self._dtype_ok(z, d):
+                    if all_id:
+                        self.emit(Fact(DUP, z.id, d.id, self.size, Layout.identity(z.shape)))
+                    else:
+                        self.emit(replace(f0, base=z.id, dist=d.id))
+        elif kinds == {SLICEGRP}:
+            if not all(self._layouts_joinable(f0, f) for f in combo[1:]):
+                return
+            if not all(
+                (f.dim, f.nchunk, f.index) == (f0.dim, f0.nchunk, f0.index) for f in combo
+            ):
+                # different chunk indices under add: the unrolled-loop
+                # accumulation (paper loop_red, Fig. 8)
+                if d.op == "add":
+                    self._loopred_accumulate(d, combo)
+                return
+            for z in self._base_candidates(d.op, b_inputs, d.params, layer=d.layer):
+                if self._dtype_ok(z, d):
+                    self.emit(replace(f0, base=z.id, dist=d.id))
+        elif kinds == {PARTIAL}:
+            # add-partials combine under add; max-partials under max
+            ops = {f.reduce_op for f in combo}
+            if ops == {"add"} and d.op == "add" or ops == {"max"} and d.op == "max":
+                if all(self._layouts_joinable(f0, f) for f in combo[1:]):
+                    for z in self._base_candidates(d.op, b_inputs, d.params, layer=d.layer):
+                        if self._dtype_ok(z, d):
+                            self.emit(replace(f0, base=z.id, dist=d.id))
+        elif kinds <= {SHARD, DUP} and SHARD in kinds:
+            self._shard_broadcast_join(d, combo, b_inputs)
+        elif kinds == {PARTIAL, DUP}:
+            # linearity: mul/div by a replicated value distributes over add-partial
+            if d.op in ("mul", "div") and len(combo) == 2:
+                fp = combo[0] if combo[0].kind == PARTIAL else combo[1]
+                if fp.reduce_op == "add":
+                    if d.op == "div" and combo[1].kind != DUP:
+                        return  # partial must be the numerator
+                    for z in self._base_candidates(d.op, b_inputs, d.params, layer=d.layer):
+                        if self._dtype_ok(z, d):
+                            self.emit(replace(fp, base=z.id, dist=d.id))
+        elif kinds <= {LOOPRED, SLICEGRP} and d.op == "add":
+            self._loopred_accumulate(d, combo)
+
+    def _shard_broadcast_join(self, d: Node, combo: Sequence[Fact], b_inputs) -> None:
+        """Elementwise join of shard facts (+ replicated operands) with
+        numpy-style trailing-dim broadcast alignment.
+
+        All shard operands must be clean and shard the *same trailing-aligned
+        dim* (k - rank equal); replicated operands must be constant along that
+        dim (size-1, lower rank, or scalar).  The result is sharded on the
+        output dim at the same trailing offset."""
+        negs = []
+        for f, inp in zip(combo, d.inputs):
+            if f.kind == SHARD:
+                k = self._shard_src_dim(f)
+                if k is None:
+                    self._diag_layout(d, [f for f in combo if f.kind == SHARD])
+                    return
+                negs.append(k - len(self.base[f.base].shape))
+        if len(set(negs)) != 1:
+            self._diag_layout(d, [f for f in combo if f.kind == SHARD])
+            return
+        k_neg = negs[0]
+        for f, inp in zip(combo, d.inputs):
+            if f.kind != DUP:
+                continue
+            shape = self.dist[inp].shape
+            pos = len(shape) + k_neg
+            ok = pos < 0 or (pos < len(shape) and shape[pos] == 1)
+            if not (f.layout.effectively_identity and ok):
+                return
+        for z in self._base_candidates(d.op, b_inputs, d.params, layer=d.layer):
+            if not self._dtype_ok(z, d):
+                continue
+            k_out = len(z.shape) + k_neg
+            if k_out < 0 or z.shape[k_out] % self.size != 0:
+                continue
+            try:
+                lay = _shard_stack_layout(z.shape, k_out, self.size)
+            except NotSplitMerge:
+                continue
+            self.emit(Fact(SHARD, z.id, d.id, self.size, lay))
+
+    def _diag_layout(self, d: Node, combo: Sequence[Fact]) -> None:
+        f0, f1 = combo[0], combo[1]
+        repair = None
+        try:
+            repair = infer_bijection(f0.layout, f1.layout)
+        except Exception:
+            repair = None
+        if not repair:
+            for f in (f1, f0):
+                repair = self.suggest_repair(f)
+                if repair:
+                    break
+        self.store.diag(
+            d.id,
+            "layout_mismatch",
+            f"{d.op} at {d.src or '?'} consumes operands with mismatched layouts "
+            f"{f0.layout} vs {f1.layout}",
+            repair=repair,
+        )
+
+    def suggest_repair(self, f: Fact) -> Optional[list]:
+        """Synthesize the reshape/transpose sequence mapping a *misaligned*
+        distributed tensor onto its clean placement (Algorithm 2 step 4, the
+        paper's BSH-repair output).  Returns per-device ops, or None."""
+        from .bijection import Layout
+
+        if f.clean:
+            return None
+        bshape = self.base[f.base].shape
+        if f.kind == DUP:
+            delta = None
+            try:
+                delta = f.layout.inverse()
+            except Exception:
+                return None
+            return delta.synthesize_ops() or None
+        if f.kind != SHARD:
+            return None
+        for k in range(len(bshape)):
+            if bshape[k] % self.size != 0:
+                continue
+            try:
+                clean = _shard_stack_layout(bshape, k, self.size)
+                delta = f.layout.inverse().compose(clean)
+            except (NotSplitMerge, ValueError):
+                continue
+            # the device dim must stay put (repair acts on local dims only)
+            if delta.perm and delta.perm[0] == 0 and delta.dst_groups and delta.dst_groups[0] == 1:
+                ops = delta.synthesize_ops()
+                if not ops:
+                    continue
+                # strip the stacked device dim into per-device ops
+                local_ops = []
+                for op, arg in ops:
+                    if op == "reshape":
+                        if arg[0] != self.size:
+                            break
+                        local_ops.append(("reshape", tuple(arg[1:])))
+                    else:
+                        if arg[0] != 0:
+                            break
+                        local_ops.append(("transpose", tuple(a - 1 for a in arg[1:])))
+                else:
+                    if local_ops:
+                        return local_ops
+        return None
+
+    def _diagnose_join(self, d: Node, fls: Sequence[list[Fact]]) -> None:
+        if d.op != "add" or len(fls) != 2 or not all(fls):
+            return
+        k0 = {f.kind for f in fls[0]}
+        k1 = {f.kind for f in fls[1]}
+        if (PARTIAL in k0) != (PARTIAL in k1):
+            self.store.diag(
+                d.id,
+                "missing_all_reduce",
+                f"add at {d.src or '?'} consumes a partial and a non-partial tensor "
+                f"— a reduction collective is likely missing before this add",
+            )
+
+    # -- loop_red (unrolled expert loops, paper Fig. 8) ---------------------------
+    def _loopred_accumulate(self, d: Node, combo: Sequence[Fact]) -> None:
+        def as_set(f: Fact) -> Optional[tuple]:
+            if f.kind == SLICEGRP:
+                return (f.base, f.dim, f.nchunk, frozenset([f.index]))
+            if f.kind == LOOPRED and f.reduce_op == "add":
+                return (f.base, f.dim, f.nchunk, f.idxset)
+            return None
+
+        sets = [as_set(f) for f in combo]
+        if any(s is None for s in sets):
+            return
+        base0, dim0, n0 = sets[0][0], sets[0][1], sets[0][2]
+        if not all(s[0] == base0 and s[1] == dim0 and s[2] == n0 for s in sets):
+            return
+        union: frozenset = frozenset()
+        total = 0
+        for s in sets:
+            total += len(s[3])
+            union = union | s[3]
+        if len(union) != total:  # reused index — not a disjoint accumulation
+            return
+        f0 = combo[0]
+        self.emit(
+            Fact(
+                LOOPRED,
+                base0,
+                d.id,
+                self.size,
+                f0.layout,
+                reduce_op="add",
+                dim=dim0,
+                nchunk=n0,
+                idxset=union,
+            )
+        )
+
+    def _loopred_base_target(self, base_tensor: int, dim: int, total_chunks: int) -> Optional[int]:
+        """Find the baseline node summing *all* chunks of ``base_tensor`` along
+        ``dim`` (paper's loop_red_B): an add-chain over slices covering every
+        chunk, or a reshape+reduce_sum."""
+        key = (base_tensor, dim, total_chunks)
+        if key in self._loopred_base_cache:
+            return self._loopred_base_cache[key]
+        g = self.base
+        tshape = g[base_tensor].shape
+        chunk = tshape[dim] // total_chunks
+        cover: dict[int, frozenset] = {}
+        order = g.toposort()
+        for nid in order:
+            z = g[nid]
+            if z.op == "slice" and z.inputs and self.base_eg.same(z.inputs[0], base_tensor):
+                start = z.param("start_indices")
+                limit = z.param("limit_indices")
+                if start is None:
+                    continue
+                full = all(
+                    (s == 0 and l == tshape[k]) or k == dim
+                    for k, (s, l) in enumerate(zip(start, limit))
+                )
+                if full and limit[dim] - start[dim] == chunk and start[dim] % chunk == 0:
+                    cover[nid] = frozenset([start[dim] // chunk])
+            elif z.op == "add" and len(z.inputs) == 2:
+                c0, c1 = cover.get(z.inputs[0]), cover.get(z.inputs[1])
+                if c0 is not None and c1 is not None and not (c0 & c1):
+                    cover[nid] = c0 | c1
+            elif z.op == "reduce_sum" and z.inputs and cover.get(z.inputs[0]) is None:
+                pass
+        result = None
+        for nid, s in cover.items():
+            if len(s) == total_chunks and g[nid].op == "add":
+                result = nid
+                break
+        self._loopred_base_cache[key] = result
+        return result
+
+    # -- layout ops ---------------------------------------------------------------
+    def _layout_op(self, d: Node) -> None:
+        x = d.inputs[0]
+        for f in self.store.facts(x):
+            if f.kind == LOOPRED:
+                continue
+            try:
+                if f.kind == SHARD:
+                    # lift to the stacked tensor: device dim 0 untouched
+                    if d.op == "reshape":
+                        new_lay = f.layout.then_reshape((self.size,) + d.shape)
+                    else:
+                        perm = tuple([0] + [p + 1 for p in d.param("permutation")])
+                        new_lay = f.layout.then_transpose(perm)
+                else:
+                    if d.op == "reshape":
+                        new_lay = f.layout.then_reshape(d.shape)
+                    else:
+                        new_lay = f.layout.then_transpose(d.param("permutation"))
+            except (NotSplitMerge, ValueError):
+                continue
+            self.emit(replace(f, base=f.base, dist=d.id, layout=new_lay))
+            # direct baseline congruence (same op on base side) is reached via
+            # the baseline layout closure in emit().
+
+    def _convert(self, d: Node) -> None:
+        x = d.inputs[0]
+        for f in self.store.facts(x):
+            matched = False
+            for z in self._base_candidates("convert", [f.base], layer=d.layer):
+                if z.dtype == d.dtype:
+                    self.emit(replace(f, base=z.id, dist=d.id))
+                    matched = True
+            if not matched:
+                self.store.diag(
+                    d.id,
+                    "precision_mismatch",
+                    f"distributed graph converts to {d.dtype} at {d.src or '?'} with no "
+                    f"matching baseline conversion (baseline stays {self.base[f.base].dtype})",
+                )
+
+    def _broadcast(self, d: Node) -> None:
+        x = d.inputs[0]
+        bd = d.param("broadcast_dimensions") or ()
+        for f in self.store.facts(x):
+            for z in self._base_candidates("broadcast", [f.base], layer=d.layer):
+                if z.param("broadcast_dimensions") != tuple(bd) or not self._dtype_ok(z, d):
+                    continue
+                if len(z.shape) != len(d.shape):
+                    continue
+                if z.shape == d.shape and f.kind in (DUP, PARTIAL):
+                    self.emit(replace(f, base=z.id, dist=d.id,
+                                      layout=Layout.identity(z.shape) if f.layout.is_identity else f.layout))
+                    continue
+                if f.kind == SHARD:
+                    # broadcast of a sharded tensor (e.g. keepdims expansion):
+                    # shapes must agree except the sharded dim scaled by c
+                    k = self._shard_src_dim(f)
+                    if k is None:
+                        continue
+                    # the sharded input dim maps through bd to an output dim
+                    if k >= len(tuple(bd)):
+                        continue
+                    out_k = tuple(bd)[k]
+                    ok = all(
+                        z.shape[i] == d.shape[i] * (self.size if i == out_k else 1)
+                        for i in range(len(z.shape))
+                    )
+                    if ok:
+                        try:
+                            lay = _shard_stack_layout(z.shape, out_k, self.size)
+                        except NotSplitMerge:
+                            continue
+                        self.emit(Fact(SHARD, z.id, d.id, self.size, lay))
+                    continue
+                if f.kind == DUP and f.layout.is_identity:
+                    # replicated operand broadcast to a *sharded* shape: derive a
+                    # shard fact for every dim consistent with c-chunking
+                    for k in range(len(z.shape)):
+                        if z.shape[k] == d.shape[k] * self.size:
+                            src_dim_ok = k not in bd or self.base[f.base].shape[bd.index(k)] == 1 if bd else True
+                            if k in bd:
+                                j = tuple(bd).index(k)
+                                src_dim_ok = self.base[f.base].shape[j] == 1
+                            else:
+                                src_dim_ok = True
+                            if not src_dim_ok:
+                                continue
+                            try:
+                                lay = _shard_stack_layout(z.shape, k, self.size)
+                            except NotSplitMerge:
+                                continue
+                            self.emit(Fact(SHARD, z.id, d.id, self.size, lay))
+
+    # -- dot -------------------------------------------------------------------
+    @staticmethod
+    def _dnums(d: Node):
+        dn = d.param("dimension_numbers")
+        (lc, rc), (lb, rb) = dn
+        return tuple(lc), tuple(rc), tuple(lb), tuple(rb)
+
+    def _shard_src_dim(self, f: Fact) -> Optional[int]:
+        """For a clean shard fact, the baseline dim carrying the device atom
+        (device atom must be the *outer* factor of that dim).  Unit atoms are
+        ignored throughout — they carry no data."""
+        lay = f.layout
+        if not lay.dst_groups:
+            return None
+        g0 = lay.dst_groups[0]
+        head = [p for p in lay.perm[:g0] if lay.atoms[p] != 1]
+        if len(head) != 1 or lay.atoms[head[0]] != self.size:
+            return None
+        dev_atom = head[0]
+        # remaining atoms must be in ascending order (identity layout otherwise)
+        rest = [p for p in lay.perm[g0:] if lay.atoms[p] != 1]
+        if rest != sorted(rest):
+            return None
+        acc = 0
+        for dim, g in enumerate(lay.src_groups):
+            if acc <= dev_atom < acc + g:
+                # outer factor check: all atoms of this dim before dev_atom are 1
+                if any(lay.atoms[k] != 1 for k in range(acc, dev_atom)):
+                    return None
+                return dim
+            acc += g
+        return None
+
+    def _dot(self, d: Node) -> None:
+        import itertools
+
+        fx = self.store.facts(d.inputs[0])
+        fy = self.store.facts(d.inputs[1])
+        if not fx or not fy:
+            return
+        lc, rc, lb, rb = self._dnums(d)
+        for f1, f2 in itertools.product(fx[:6], fy[:6]):
+            self._try_dot(d, f1, f2, lc, rc, lb, rb)
+
+    def _dot_out_dim(self, side: str, dim: int, lc, rc, lb, rb, lhs_rank: int) -> Optional[int]:
+        """Output dim index of a non-contracted input dim (jax dot layout:
+        batch dims, then lhs free, then rhs free)."""
+        if side == "l":
+            if dim in lc:
+                return None
+            if dim in lb:
+                return lb.index(dim)
+            free = [i for i in range(lhs_rank) if i not in lc and i not in lb]
+            return len(lb) + free.index(dim)
+        else:
+            if dim in rc:
+                return None
+            if dim in rb:
+                return rb.index(dim)
+            # rhs free dims come last; need lhs rank info for offset — caller adds it
+            return None  # handled inline below
+
+    def _try_dot(self, d: Node, f1: Fact, f2: Fact, lc, rc, lb, rb) -> None:
+        kinds = (f1.kind, f2.kind)
+        b_inputs = [f1.base, f2.base]
+
+        def bases():
+            return [
+                z
+                for z in self._base_candidates("dot", b_inputs, d.params, layer=d.layer)
+                if self._dtype_ok(z, d)
+            ]
+
+        def dup_id(f):
+            return (f.layout.effectively_identity
+                    and f.layout.src_shape == f.layout.dst_shape)
+
+        id1 = dup_id(f1) or (f1.kind == SHARD and self._shard_src_dim(f1) is not None)
+        id2 = dup_id(f2) or (f2.kind == SHARD and self._shard_src_dim(f2) is not None)
+        if not (id1 and id2):
+            if f1.kind in (DUP, SHARD) and f2.kind in (DUP, SHARD):
+                self._diag_layout(d, (f1, f2))
+            return
+
+        if kinds == (DUP, DUP):
+            for z in bases():
+                self.emit(Fact(DUP, z.id, d.id, self.size, Layout.identity(z.shape)))
+        elif kinds == (PARTIAL, DUP) and f1.reduce_op == "add":
+            for z in bases():
+                self.emit(Fact(PARTIAL, z.id, d.id, self.size, Layout.identity(z.shape), reduce_op="add"))
+        elif kinds == (DUP, PARTIAL) and f2.reduce_op == "add":
+            for z in bases():
+                self.emit(Fact(PARTIAL, z.id, d.id, self.size, Layout.identity(z.shape), reduce_op="add"))
+        elif kinds == (SHARD, SHARD):
+            k1, k2 = self._shard_src_dim(f1), self._shard_src_dim(f2)
+            if k1 is None or k2 is None:
+                return
+            if k1 in lc and k2 in rc and lc.index(k1) == rc.index(k2):
+                # contracted on matching positions -> partial sum
+                for z in bases():
+                    self.emit(
+                        Fact(PARTIAL, z.id, d.id, self.size, Layout.identity(z.shape), reduce_op="add")
+                    )
+            elif k1 in lb and k2 in rb and lb.index(k1) == rb.index(k2):
+                for z in bases():
+                    lay = _shard_stack_layout(z.shape, lb.index(k1), self.size)
+                    self.emit(Fact(SHARD, z.id, d.id, self.size, lay))
+            else:
+                self.store.diag(
+                    d.id,
+                    "wrong_axis_split",
+                    f"dot at {d.src or '?'} contracts shards along mismatched dims "
+                    f"({k1} vs {k2})",
+                )
+        elif SHARD in kinds and DUP in kinds:
+            fs = f1 if f1.kind == SHARD else f2
+            side = "l" if f1.kind == SHARD else "r"
+            k = self._shard_src_dim(fs)
+            if k is None:
+                return
+            contract = lc if side == "l" else rc
+            batch = lb if side == "l" else rb
+            if k in contract:
+                self.store.diag(
+                    d.id,
+                    "missing_all_reduce",
+                    f"dot at {d.src or '?'} contracts a sharded dim against a replicated "
+                    f"operand — result would be partial but pairing shard is absent",
+                )
+                return
+            for z in bases():
+                lhs_rank = len(self.base[z.inputs[0]].shape)
+                if side == "l":
+                    if k in lb:
+                        out_dim = lb.index(k)
+                    else:
+                        free = [i for i in range(lhs_rank) if i not in lc and i not in lb]
+                        out_dim = len(lb) + free.index(k)
+                else:
+                    rhs_rank = len(self.base[z.inputs[1]].shape)
+                    if k in rb:
+                        out_dim = rb.index(k)
+                    else:
+                        lfree = [i for i in range(lhs_rank) if i not in lc and i not in lb]
+                        rfree = [i for i in range(rhs_rank) if i not in rc and i not in rb]
+                        out_dim = len(lb) + len(lfree) + rfree.index(k)
+                try:
+                    lay = _shard_stack_layout(z.shape, out_dim, self.size)
+                except NotSplitMerge:
+                    continue
+                self.emit(Fact(SHARD, z.id, d.id, self.size, lay))
+
+    # -- reductions ----------------------------------------------------------------
+    def _reduce(self, d: Node) -> None:
+        axes = tuple(d.param("axes") or ())
+        red = {"reduce_sum": "add", "reduce_max": "max", "reduce_min": "min"}.get(d.op)
+        for f in self.store.facts(d.inputs[0]):
+            if f.kind == DUP and _dup_id(f):
+                for z in self._base_candidates(d.op, [f.base], d.params, layer=d.layer):
+                    if self._dtype_ok(z, d):
+                        self.emit(Fact(DUP, z.id, d.id, self.size, Layout.identity(z.shape)))
+            elif f.kind == SHARD:
+                k = self._shard_src_dim(f)
+                if k is None:
+                    continue
+                for z in self._base_candidates(d.op, [f.base], d.params, layer=d.layer):
+                    if not self._dtype_ok(z, d):
+                        continue
+                    if k in axes:
+                        if red is None:
+                            continue
+                        self.emit(
+                            Fact(PARTIAL, z.id, d.id, self.size, Layout.identity(z.shape), reduce_op=red)
+                        )
+                    else:
+                        new_k = k - sum(1 for a in axes if a < k)
+                        try:
+                            lay = _shard_stack_layout(z.shape, new_k, self.size)
+                        except NotSplitMerge:
+                            continue
+                        self.emit(Fact(SHARD, z.id, d.id, self.size, lay))
+            elif f.kind == PARTIAL and _dup_id(f):
+                commutes = (f.reduce_op == "add" and d.op == "reduce_sum") or (
+                    f.reduce_op == "max" and d.op == "reduce_max"
+                ) or (f.reduce_op == "min" and d.op == "reduce_min")
+                if commutes:
+                    for z in self._base_candidates(d.op, [f.base], d.params, layer=d.layer):
+                        if self._dtype_ok(z, d):
+                            self.emit(
+                                Fact(
+                                    PARTIAL, z.id, d.id, self.size, Layout.identity(z.shape),
+                                    reduce_op=f.reduce_op,
+                                )
+                            )
+
+    # -- collectives -------------------------------------------------------------
+    def _axis_match(self, d: Node) -> bool:
+        axes = d.param("axes") or (d.param("axis"),)
+        if isinstance(axes, str):
+            axes = (axes,)
+        return self.axis in tuple(axes)
+
+    def _full_group(self, d: Node) -> bool:
+        groups = d.param("groups")
+        return groups is None or groups == "full"
+
+    def _all_reduce(self, d: Node) -> None:
+        op = d.param("reduce_op", "add")
+        if not self._axis_match(d):
+            return
+        for f in self.store.facts(d.inputs[0]):
+            if f.kind == PARTIAL and f.reduce_op == op:
+                if not self._full_group(d):
+                    self.store.diag(
+                        d.id,
+                        "wrong_replica_groups",
+                        f"all_reduce at {d.src or '?'} uses replica groups "
+                        f"{d.param('groups')} — partial tensors require the full axis group",
+                    )
+                    continue
+                self.emit(Fact(DUP, f.base, d.id, self.size, f.layout))
+            elif f.kind == DUP:
+                self.store.diag(
+                    d.id,
+                    "redundant_all_reduce",
+                    f"all_reduce at {d.src or '?'} over a replicated tensor multiplies "
+                    f"it by the axis size — likely a redundant collective",
+                )
+            elif f.kind == LOOPRED and op == "add":
+                total = f.nchunk * self.size
+                if f.idxset == frozenset(range(f.nchunk)) and self._full_group(d):
+                    target = self._loopred_base_target(f.base, f.dim, total)
+                    if target is not None:
+                        z = self.base[target]
+                        self.emit(Fact(DUP, z.id, d.id, self.size, Layout.identity(z.shape)))
+
+    def _all_gather(self, d: Node) -> None:
+        if not self._axis_match(d):
+            return
+        gdim = d.param("all_gather_dimension", 0)
+        tiled = d.param("tiled", False)
+        for f in self.store.facts(d.inputs[0]):
+            if f.kind != SHARD:
+                if f.kind == DUP:
+                    self.store.diag(
+                        d.id,
+                        "redundant_all_gather",
+                        f"all_gather at {d.src or '?'} over a replicated tensor tiles it "
+                        f"{self.size}x — likely redundant",
+                    )
+                continue
+            lay = f.layout  # B -> (c, *local)
+            rank = len(lay.dst_shape)
+            try:
+                if tiled:
+                    new_lay = lay.then_transpose(_move_dim(rank, 0, gdim))
+                    merged = list(new_lay.dst_shape)
+                    merged[gdim] = merged[gdim] * merged[gdim + 1]
+                    del merged[gdim + 1]
+                    new_lay = new_lay.then_reshape(tuple(merged))
+                else:
+                    new_lay = lay.then_transpose(_move_dim(rank, 0, gdim))
+            except (NotSplitMerge, ValueError):
+                continue
+            self.emit(Fact(DUP, f.base, d.id, self.size, new_lay))
+
+    def _reduce_scatter(self, d: Node) -> None:
+        if not self._axis_match(d):
+            return
+        sdim = d.param("scatter_dimension", 0)
+        op = d.param("reduce_op", "add")
+        for f in self.store.facts(d.inputs[0]):
+            if f.kind != PARTIAL or f.reduce_op != op:
+                continue
+            lay = f.layout  # B -> D_shape (pre-scatter local shape)
+            shape = lay.dst_shape
+            if shape[sdim] % self.size != 0:
+                continue
+            try:
+                split = shape[:sdim] + (self.size, shape[sdim] // self.size) + shape[sdim + 1 :]
+                new_lay = lay.then_reshape(split).then_transpose(_move_dim(len(split), sdim, 0))
+            except (NotSplitMerge, ValueError):
+                continue
+            self.emit(Fact(SHARD, f.base, d.id, self.size, new_lay))
+
+    def _all_to_all(self, d: Node) -> None:
+        if not self._axis_match(d):
+            return
+        sa = d.param("split_axis")
+        ca = d.param("concat_axis")
+        for f in self.store.facts(d.inputs[0]):
+            if f.kind != SHARD:
+                continue
+            lay = f.layout  # B -> (c, *local)
+            stacked = lay.dst_shape
+            c = self.size
+            if stacked[sa + 1] % c != 0:
+                continue
+            try:
+                # split the split_axis into (c, rest)
+                split = stacked[: sa + 1] + (c, stacked[sa + 1] // c) + stacked[sa + 2 :]
+                new_lay = lay.then_reshape(split)
+                rank = len(split)
+                # new device dim = the freshly split chunk index (at sa+1);
+                # old device dim (0) becomes the outer factor of concat dim.
+                # permute: [sa+1, 0, rest...] then position old-0 before concat.
+                order = [sa + 1] + [i for i in range(rank) if i != sa + 1]
+                new_lay = new_lay.then_transpose(tuple(order))
+                # now dims: [newdev, olddev, locals...(sa slot now rest)]
+                # move olddev (pos 1) to just before concat dim ca (local dims
+                # offset by 1 for the stacked dev dim)
+                target = ca + 1
+                new_lay = new_lay.then_transpose(_move_dim(rank, 1, target))
+                merged = list(new_lay.dst_shape)
+                merged[target] = merged[target] * merged[target + 1]
+                del merged[target + 1]
+                new_lay = new_lay.then_reshape(tuple(merged))
+            except (NotSplitMerge, ValueError):
+                continue
+            self.emit(Fact(SHARD, f.base, d.id, self.size, new_lay))
+
+    def _dynamic_sliceish(self, d: Node) -> None:
+        """dynamic_slice / dynamic_update_slice (KV-cache reads/writes):
+        dup via congruence; clean shard facts carry through when the sharded
+        dim is untouched by the dynamic indexing (start operands replicated
+        and congruent with the baseline's)."""
+        self._generic(d)
+        import itertools
+
+        n_data = 2 if d.op == "dynamic_update_slice" else 1
+        data_in = d.inputs[:n_data]
+        idx_in = d.inputs[n_data:]
+        idx_fact_lists = [
+            [f for f in self.store.facts(i) if f.kind == DUP and _dup_id(f)][:4]
+            for i in idx_in
+        ]
+        if not all(idx_fact_lists):
+            return
+        data_fact_lists = [self.store.facts(i) for i in data_in]
+        if not all(data_fact_lists):
+            return
+        for combo_all in itertools.product(*[fl[:6] for fl in data_fact_lists],
+                                           *idx_fact_lists):
+            combo = combo_all[:len(data_in)]
+            idx_facts = combo_all[len(data_in):]
+            if not any(f.kind == SHARD for f in combo):
+                continue
+            negs = set()
+            ok = True
+            for f in combo:
+                if f.kind == SHARD:
+                    k = self._shard_src_dim(f)
+                    if k is None:
+                        ok = False
+                        break
+                    negs.add(k - len(self.base[f.base].shape))
+                elif not (f.kind == DUP and _dup_id(f)):
+                    ok = False
+                    break
+            if not ok or len(negs) != 1:
+                continue
+            k_neg = next(iter(negs))
+            b_inputs = [f.base for f in combo] + [f.base for f in idx_facts]
+            for z in self._base_candidates(d.op, b_inputs, d.params, layer=d.layer):
+                if not self._dtype_ok(z, d):
+                    continue
+                k_out = len(z.shape) + k_neg
+                if k_out < 0 or z.shape[k_out] % self.size != 0:
+                    continue
+                try:
+                    lay = _shard_stack_layout(z.shape, k_out, self.size)
+                except NotSplitMerge:
+                    continue
+                self.emit(Fact(SHARD, z.id, d.id, self.size, lay))
+
+    def _concat(self, d: Node) -> None:
+        """concat: dup operands via congruence; shard operands concat along a
+        non-sharded dim keep the shard relation."""
+        self._generic(d)
+        import itertools
+
+        dim = d.param("dimension")
+        fls = [self.store.facts(i) for i in d.inputs]
+        if not all(fls) or dim is None:
+            return
+        for combo in itertools.product(*[fl[:4] for fl in fls]):
+            if not all(f.kind == SHARD for f in combo):
+                continue
+            ks = {self._shard_src_dim(f) for f in combo}
+            if len(ks) != 1 or None in ks or dim in ks:
+                continue
+            k = next(iter(ks))
+            b_inputs = [f.base for f in combo]
+            for z in self._base_candidates("concat", b_inputs, d.params, layer=d.layer):
+                if self._dtype_ok(z, d):
+                    try:
+                        lay = _shard_stack_layout(z.shape, k, self.size)
+                    except NotSplitMerge:
+                        continue
+                    self.emit(Fact(SHARD, z.id, d.id, self.size, lay))
+
+    # -- slices -----------------------------------------------------------------
+    def _slice(self, d: Node) -> None:
+        start = d.param("start_indices")
+        limit = d.param("limit_indices")
+        strides = d.param("strides")
+        if strides is not None and any(s != 1 for s in strides):
+            self._generic(d)
+            return
+        x = d.inputs[0]
+        xshape = self.dist[x].shape
+        for f in self.store.facts(x):
+            if f.kind == DUP and _dup_id(f):
+                for z in self._base_candidates("slice", [f.base], d.params, layer=d.layer):
+                    if self._dtype_ok(z, d):
+                        self.emit(Fact(DUP, z.id, d.id, self.size, Layout.identity(z.shape)))
+            if f.kind == SHARD:
+                self._shard_slice_unsharded_dims(d, f, start, limit, xshape)
+                self._slicegrp_from_slice(d, f, start, limit, xshape)
+            if f.kind == PARTIAL and f.reduce_op == "add" and _dup_id(f):
+                for z in self._base_candidates("slice", [f.base], d.params, layer=d.layer):
+                    if self._dtype_ok(z, d):
+                        self.emit(
+                            Fact(PARTIAL, z.id, d.id, self.size, Layout.identity(z.shape), reduce_op="add")
+                        )
+
+    def _shard_slice_unsharded_dims(self, d: Node, f: Fact, start, limit, xshape) -> None:
+        """d = slice(x') touching only *unsharded* dims of a cleanly sharded
+        tensor: the shard relation carries through to the baseline slice with
+        identical coordinates (the sharded dim taken whole on both sides)."""
+        k = self._shard_src_dim(f)
+        if k is None or start is None or k >= len(start) or k >= len(xshape):
+            return
+        if not (start[k] == 0 and limit[k] == xshape[k]):
+            return
+        bshape = self.base[f.base].shape
+        for zid in self.base.consumers(f.base):
+            z = self.base[zid]
+            if z.op != "slice" or not self.base_eg.same(z.inputs[0], f.base):
+                continue
+            zs, zl = z.param("start_indices"), z.param("limit_indices")
+            zstr = z.param("strides")
+            if zstr is not None and any(s != 1 for s in zstr):
+                continue
+            ok = True
+            for i in range(len(bshape)):
+                if i == k:
+                    ok &= zs[i] == 0 and zl[i] == bshape[i]
+                else:
+                    ok &= zs[i] == start[i] and zl[i] == limit[i]
+            if ok and self._dtype_ok(z, d):
+                try:
+                    lay = _shard_stack_layout(z.shape, k, self.size)
+                except NotSplitMerge:
+                    continue
+                self.emit(Fact(SHARD, z.id, d.id, self.size, lay))
+
+    def _slicegrp_from_slice(self, d: Node, f: Fact, start, limit, xshape) -> None:
+        """d = slice(x') taking an aligned chunk of the *sharded* dim of x'
+        (paper's fine-grained slicing, Fig. 8)."""
+        if f.kind != SHARD:
+            return
+        k = self._shard_src_dim(f)
+        if k is None or start is None:
+            return
+        # slice must be full on all dims except the local image of k (== k for
+        # clean layouts) and chunk-aligned there
+        sliced_dims = [
+            i for i, (s, l) in enumerate(zip(start, limit)) if not (s == 0 and l == xshape[i])
+        ]
+        if sliced_dims != [k]:
+            return
+        length = limit[k] - start[k]
+        if length <= 0 or xshape[k] % length != 0 or start[k] % length != 0:
+            return
+        n = xshape[k] // length
+        self.emit(
+            Fact(
+                SLICEGRP,
+                f.base,
+                d.id,
+                self.size,
+                f.layout,
+                dim=k,
+                nchunk=n,
+                index=start[k] // length,
+            )
+        )

@@ -1,0 +1,91 @@
+"""Synthetic-but-learnable token pipeline.
+
+The stream is a deterministic function of (seed, step, host shard): a mixture
+of first-order Markov chains whose transition tables derive from the seed.
+Properties the framework needs from real data are preserved:
+
+  * **sharded**: each DP rank draws a disjoint slice of the global batch;
+  * **resumable**: ``state = (seed, step)`` fully determines the batch — a
+    restore at step k replays exactly the batch a failed run would have seen
+    (tested in tests/test_checkpoint.py);
+  * **learnable**: a ~100M model visibly reduces loss within hundreds of
+    steps (the Markov structure is compressible), which the end-to-end
+    example exploits.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Iterator, Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+
+@dataclass(frozen=True)
+class DataConfig:
+    vocab: int
+    seq_len: int
+    global_batch: int
+    seed: int = 0
+    n_states: int = 64  # markov chain order-1 state count
+
+
+class SyntheticLM:
+    def __init__(self, cfg: DataConfig):
+        self.cfg = cfg
+        rng = np.random.default_rng(cfg.seed)
+        # sparse-ish transition structure: each state prefers ~8 tokens
+        k = min(8, cfg.vocab)
+        self._prefs = rng.integers(0, cfg.vocab, size=(cfg.n_states, k))
+        self._state_of = rng.integers(0, cfg.n_states, size=cfg.vocab)
+
+    def batch_at(self, step: int, *, shard: int = 0, n_shards: int = 1) -> dict:
+        """The (deterministic) global batch at ``step``, restricted to a DP
+        shard.  Tokens and next-token labels."""
+        cfg = self.cfg
+        b_loc = cfg.global_batch // n_shards
+        rng = np.random.default_rng(
+            np.random.SeedSequence([cfg.seed, step, shard]))
+        toks = np.empty((b_loc, cfg.seq_len + 1), np.int32)
+        state = rng.integers(0, cfg.n_states, size=b_loc)
+        toks[:, 0] = self._prefs[state, rng.integers(0, self._prefs.shape[1], b_loc)]
+        for t in range(1, cfg.seq_len + 1):
+            state = self._state_of[toks[:, t - 1]]
+            choice = rng.integers(0, self._prefs.shape[1], b_loc)
+            explore = rng.random(b_loc) < 0.1
+            nxt = self._prefs[state, choice]
+            nxt = np.where(explore, rng.integers(0, cfg.vocab, b_loc), nxt)
+            toks[:, t] = nxt
+        return {
+            "tokens": jnp.asarray(toks[:, :-1]),
+            "labels": jnp.asarray(toks[:, 1:]),
+        }
+
+    def iter_from(self, step: int, **kw) -> Iterator[dict]:
+        while True:
+            yield self.batch_at(step, **kw)
+            step += 1
+
+
+def make_batch_for(cfg_arch, shape_spec, *, seed: int = 0, step: int = 0,
+                   shard: int = 0, n_shards: int = 1) -> dict:
+    """Concrete batch matching configs.input_specs for smoke/e2e runs."""
+    B = shape_spec.global_batch // n_shards
+    S = shape_spec.seq_len
+    rng = np.random.default_rng(np.random.SeedSequence([seed, step, shard]))
+    out = {}
+    if cfg_arch.frontend == "vision_patches":
+        out["vision_embeds"] = jnp.asarray(
+            rng.standard_normal((B, cfg_arch.frontend_len, cfg_arch.frontend_dim),
+                                np.float32), jnp.bfloat16)
+        out["tokens"] = jnp.asarray(
+            rng.integers(0, cfg_arch.vocab, (B, S - cfg_arch.frontend_len)), jnp.int32)
+    elif cfg_arch.frontend == "audio_frames":
+        out["frames"] = jnp.asarray(
+            rng.standard_normal((B, S, cfg_arch.d_model), np.float32), jnp.bfloat16)
+    else:
+        data = SyntheticLM(DataConfig(cfg_arch.vocab, S, shape_spec.global_batch, seed))
+        return data.batch_at(step, shard=shard, n_shards=n_shards)
+    out["labels"] = jnp.asarray(rng.integers(0, cfg_arch.vocab, (B, S)), jnp.int32)
+    return out

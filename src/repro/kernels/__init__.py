@@ -1,0 +1,7 @@
+"""Pallas TPU kernels for the compute hot spots (flash attention, Mamba-2
+SSD chunked scan, fused RMSNorm) with jit'd wrappers (ops.py) and pure-jnp
+oracles (ref.py).  Validated on CPU with interpret=True; on TPU the models
+select them via ``Model(..., impl="pallas")``."""
+from . import ops, ref
+
+__all__ = ["ops", "ref"]

@@ -1,0 +1,63 @@
+"""Pure-jnp oracles for every Pallas kernel.
+
+These are the *mathematical definitions* (naive softmax attention; the
+literal SSD recurrence h_t = a_t h_{t-1} + dt_t B_t x_t^T), deliberately
+different algorithms from both the chunked jnp reference used in models/ and
+the Pallas kernels — three-way agreement is the correctness argument.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def attention_ref(q, k, v, *, causal: bool = True):
+    """Naive softmax attention.  q: (B,Hq,Sq,D); k/v: (B,Hkv,Sk,D)."""
+    B, Hq, Sq, D = q.shape
+    Hkv, Sk = k.shape[1], k.shape[2]
+    G = Hq // Hkv
+    kq = jnp.repeat(k, G, axis=1)
+    vq = jnp.repeat(v, G, axis=1)
+    s = jnp.einsum("bhqd,bhkd->bhqk", q.astype(jnp.float32), kq.astype(jnp.float32))
+    s = s / jnp.sqrt(jnp.float32(D))
+    if causal:
+        mask = jnp.tril(jnp.ones((Sq, Sk), bool), k=Sk - Sq)
+        s = jnp.where(mask[None, None], s, -1e30)
+    p = jax.nn.softmax(s, axis=-1)
+    return jnp.einsum("bhqk,bhkd->bhqd", p, vq.astype(jnp.float32)).astype(q.dtype)
+
+
+def ssd_ref(x, dt, A, Bm, Cm):
+    """Literal SSD recurrence (sequential over time).
+
+    x: (B,S,H,P); dt: (B,S,H) post-softplus; A: (H,) negative;
+    Bm/Cm: (B,S,N).  y_t = C_t · h_t with h_t = exp(dt_t A) h_{t-1}
+    + dt_t B_t x_t^T.   Returns y (B,S,H,P) float32."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    f32 = jnp.float32
+
+    def step(h, inp):
+        xt, dtt, bt, ct = inp  # (B,H,P), (B,H), (B,N), (B,N)
+        decay = jnp.exp(dtt * A)  # (B,H)
+        h = h * decay[..., None, None] + jnp.einsum(
+            "bh,bn,bhp->bhpn", dtt, bt, xt
+        )
+        y = jnp.einsum("bn,bhpn->bhp", ct, h)
+        return h, y
+
+    h0 = jnp.zeros((Bsz, H, P, N), f32)
+    xs = (
+        x.transpose(1, 0, 2, 3).astype(f32),
+        dt.transpose(1, 0, 2).astype(f32),
+        Bm.transpose(1, 0, 2).astype(f32),
+        Cm.transpose(1, 0, 2).astype(f32),
+    )
+    _, ys = jax.lax.scan(step, h0, xs)
+    return ys.transpose(1, 0, 2, 3)  # (B,S,H,P)
+
+
+def rmsnorm_ref(x, scale, eps: float = 1e-5):
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(x.dtype) * scale

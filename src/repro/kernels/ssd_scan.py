@@ -1,0 +1,88 @@
+"""Pallas TPU kernel for the Mamba-2 SSD chunked scan.
+
+Grid (B, H, n_chunks) with the chunk dim innermost: each (b, h) pair walks
+its chunks sequentially, carrying the (P, N) SSM state in VMEM scratch —
+the inter-chunk recurrence lives entirely in registers/VMEM while the
+intra-chunk work is three MXU matmuls (C·Bᵀ, (scores⊙L)·x, Bᵀ·x), exactly
+the structure of Listing 1 in [arXiv:2405.21060] adapted to TPU tiling:
+chunk length Q is the sublane dim, state N / head P the lane dims (128).
+
+Validated in interpret mode against the literal recurrence (ref.ssd_ref)
+and the chunked jnp implementation in models/ssm.py.
+"""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+from jax.experimental.pallas import tpu as pltpu
+
+
+def _ssd_kernel(x_ref, dt_ref, a_ref, b_ref, c_ref, y_ref, state_ref, *, q: int):
+    ic = pl.program_id(2)
+
+    @pl.when(ic == 0)
+    def _init():
+        state_ref[...] = jnp.zeros_like(state_ref)
+
+    x = x_ref[0, :, 0, :].astype(jnp.float32)  # (Q, P)
+    dt = dt_ref[0, :, 0].astype(jnp.float32)  # (Q,)
+    a = a_ref[0]  # scalar A_h (negative)
+    bm = b_ref[0].astype(jnp.float32)  # (Q, N)
+    cm = c_ref[0].astype(jnp.float32)  # (Q, N)
+
+    da = dt * a  # (Q,) log-decay steps
+    cum = jnp.cumsum(da)  # (Q,)
+
+    # intra-chunk: L[i,j] = exp(cum_i - cum_j) for j <= i
+    diff = cum[:, None] - cum[None, :]
+    tri = jax.lax.broadcasted_iota(jnp.int32, (q, q), 0) >= jax.lax.broadcasted_iota(
+        jnp.int32, (q, q), 1)
+    L = jnp.where(tri, jnp.exp(diff), 0.0)
+    scores = jax.lax.dot_general(cm, bm, (((1,), (1,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (Q, Q)
+    y_diag = jax.lax.dot_general(scores * L * dt[None, :], x,
+                                 (((1,), (0,)), ((), ())),
+                                 preferred_element_type=jnp.float32)  # (Q, P)
+
+    # inter-chunk: contribution of the incoming state
+    state = state_ref[...]  # (N, P)
+    y_off = jnp.exp(cum)[:, None] * jax.lax.dot_general(
+        cm, state, (((1,), (0,)), ((), ())), preferred_element_type=jnp.float32)
+
+    y_ref[0, :, 0, :] = (y_diag + y_off).astype(y_ref.dtype)
+
+    # state update: S' = S * exp(sum da) + Σ_k exp(cum_Q - cum_k) dt_k B_k x_k^T
+    decay_end = jnp.exp(cum[-1] - cum) * dt  # (Q,)
+    new_state = state * jnp.exp(cum[-1]) + jax.lax.dot_general(
+        bm * decay_end[:, None], x, (((0,), (0,)), ((), ())),
+        preferred_element_type=jnp.float32)  # (N, P)
+    state_ref[...] = new_state
+
+
+def ssd_scan(x, dt, A, Bm, Cm, *, chunk: int = 128, interpret: bool = False):
+    """x: (B,S,H,P); dt: (B,S,H); A: (H,); Bm/Cm: (B,S,N) -> y (B,S,H,P) f32."""
+    Bsz, S, H, P = x.shape
+    N = Bm.shape[-1]
+    q = min(chunk, S)
+    n_c = S // q
+    assert n_c * q == S, (S, q)
+
+    kernel = functools.partial(_ssd_kernel, q=q)
+    return pl.pallas_call(
+        kernel,
+        grid=(Bsz, H, n_c),
+        in_specs=[
+            pl.BlockSpec((1, q, 1, P), lambda b, h, c: (b, c, h, 0)),
+            pl.BlockSpec((1, q, 1), lambda b, h, c: (b, c, h)),
+            pl.BlockSpec((1,), lambda b, h, c: (h,)),
+            pl.BlockSpec((1, q, N), lambda b, h, c: (b, c, 0)),
+            pl.BlockSpec((1, q, N), lambda b, h, c: (b, c, 0)),
+        ],
+        out_specs=pl.BlockSpec((1, q, 1, P), lambda b, h, c: (b, c, h, 0)),
+        out_shape=jax.ShapeDtypeStruct((Bsz, S, H, P), jnp.float32),
+        scratch_shapes=[pltpu.VMEM((N, P), jnp.float32)],
+        interpret=interpret,
+    )(x, dt, A, Bm, Cm)

@@ -1,0 +1,203 @@
+"""Roofline-term extraction for dry-run cells.
+
+Three sources, cross-checked:
+  1. ``compiled.cost_analysis()``     — XLA's per-device FLOPs/bytes.
+  2. ``compiled.memory_analysis()``   — per-device buffer/argument sizes.
+  3. our own TensorIR trace (scan_inline) — exact per-device collective wire
+     bytes and analytic dot-FLOPs with scan trip counts multiplied in (HLO
+     text hides loop multiplicity, so collectives are counted from the IR).
+
+Hardware model (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
+~50 GB/s/link ICI (1-link conservative wire model; ring collectives):
+  all_reduce P bytes    -> 2 * P * (n-1)/n   per device on the wire
+  all_gather/reduce_scatter of full size G -> G * (n-1)/n
+  all_to_all I          -> I * (n-1)/n
+"""
+from __future__ import annotations
+
+import json
+import re
+from dataclasses import asdict, dataclass, field
+from typing import Any, Optional
+
+from repro.core.ir import COLLECTIVES
+from repro.core.trace import trace
+
+PEAK_FLOPS = 197e12  # bf16 / chip
+HBM_BW = 819e9  # bytes/s / chip
+LINK_BW = 50e9  # bytes/s / link (ICI)
+
+_DTYPE_BYTES = {
+    "float32": 4, "f32": 4, "bfloat16": 2, "bf16": 2, "float16": 2,
+    "int32": 4, "s32": 4, "int8": 1, "s8": 1, "uint8": 1, "bool": 1,
+    "int64": 8, "float64": 8, "pred": 1, "uint32": 4, "int16": 2,
+}
+
+
+def dtype_bytes(dt: str) -> int:
+    return _DTYPE_BYTES.get(str(dt), 4)
+
+
+@dataclass
+class CollectiveRecord:
+    op: str
+    axes: tuple
+    n: int
+    shape: tuple
+    dtype: str
+    mult: int
+    payload_bytes: int
+    wire_bytes: int
+
+
+def _axis_product(axes, mesh_sizes: dict) -> int:
+    n = 1
+    for a in axes or ():
+        n *= mesh_sizes.get(a, 1)
+    return n
+
+
+# ops whose outputs are materialized to HBM in the first-order fusion model
+# (elementwise/layout chains are assumed fused into their consumers)
+_MATERIALIZE = frozenset(
+    "dot conv reduce_sum reduce_max reduce_min reduce_prod all_reduce all_gather "
+    "reduce_scatter all_to_all ppermute concat gather scatter scatter_add sort "
+    "top_k cumsum dynamic_update_slice dynamic_slice".split()
+)
+
+
+def collect_ir_stats(fn, avals, mesh_sizes: dict) -> dict:
+    """Trace fn and account collectives, FLOPs and HBM traffic with scan trip
+    counts multiplied in (XLA's HloCostAnalysis counts while bodies ONCE, so
+    the compiled cost_analysis() is only a per-iteration cross-check)."""
+    g, _, _ = trace(fn, *avals, scan_inline=True)
+    colls: list[CollectiveRecord] = []
+    dot_flops = 0
+    ew_flops = 0
+    hbm_bytes = 0
+    kernel_hbm_bytes = 0  # traffic eliminated by the Pallas kernels (VMEM-resident)
+    # scope markers: named_scope tags + the attention einsum labels (jnp.einsum
+    # substitutes its own scope; backward eqns drop scopes entirely, so this
+    # UNDER-counts kernel savings — forward-only, noted in EXPERIMENTS.md)
+    _KERNEL_SCOPES = ("flash_attn", "ssd_kernel",
+                      "bhgqd,bhkd->bhgqk", "bhgqk,bhkd->bhgqd",
+                      "bcqn,bckn->bcqk", "bchqk,bckhp->bcqhp",
+                      "bckn,bckh,bckhp->bchpn", "bcqn,bchpn,bcqh->bcqhp")
+
+    def in_kernel(node) -> bool:
+        return any(k in node.scope for k in _KERNEL_SCOPES)
+
+    for node in g:
+        mult = node.param("mult", 1) or 1
+        nbytes = node.size * dtype_bytes(node.dtype)
+        if node.op in _MATERIALIZE:
+            in_bytes = sum(
+                g[i].size * dtype_bytes(g[i].dtype) for i in node.inputs
+            )
+            hbm_bytes += (nbytes + in_bytes) * mult
+            if in_kernel(node):
+                # with the Pallas kernel these stay in VMEM except kernel
+                # inputs read from HBM and outputs written back
+                ext_in = sum(
+                    g[i].size * dtype_bytes(g[i].dtype)
+                    for i in node.inputs if not in_kernel(g[i])
+                    and g[i].op not in ("const",)
+                )
+                escapes = any(not in_kernel(g[c]) for c in g.consumers(node.id))
+                kernel_hbm_bytes += (nbytes + in_bytes - ext_in
+                                     - (nbytes if escapes else 0)) * mult
+        elif node.op in ("input", "param", "const"):
+            pass
+        else:
+            ew_flops += node.size * mult
+        if node.op in COLLECTIVES:
+            axes = node.param("axes") or ()
+            n = _axis_product(axes, mesh_sizes)
+            if n <= 1:
+                continue
+            if node.op in ("all_gather",):
+                payload = node.size * dtype_bytes(node.dtype)  # gathered size
+                wire = payload * (n - 1) // n
+            elif node.op in ("reduce_scatter", "all_to_all"):
+                src = g[node.inputs[0]]
+                payload = src.size * dtype_bytes(src.dtype)
+                wire = payload * (n - 1) // n
+            elif node.op == "ppermute":
+                payload = node.size * dtype_bytes(node.dtype)
+                wire = payload
+            else:  # all_reduce
+                payload = node.size * dtype_bytes(node.dtype)
+                wire = 2 * payload * (n - 1) // n
+            colls.append(
+                CollectiveRecord(node.op, tuple(axes), n, node.shape, node.dtype,
+                                 mult, payload * mult, wire * mult)
+            )
+        elif node.op == "dot":
+            dn = node.param("dimension_numbers")
+            if dn is None:
+                continue
+            (lc, rc), (lb, rb) = dn
+            lhs = g[node.inputs[0]]
+            k = 1
+            for d in lc:
+                k *= lhs.shape[d]
+            dot_flops += 2 * node.size * k * mult
+    return {
+        "collectives": [asdict(c) for c in colls],
+        "collective_wire_bytes": sum(c.wire_bytes for c in colls),
+        "collective_payload_bytes": sum(c.payload_bytes for c in colls),
+        "ir_dot_flops": dot_flops,
+        "ir_ew_flops": ew_flops,
+        "ir_hbm_bytes": hbm_bytes,
+        "ir_kernel_saved_bytes": kernel_hbm_bytes,
+        "ir_nodes": len(g.nodes),
+    }
+
+
+def roofline_terms(cost: dict, ir: dict, *, model_flops_per_device: float) -> dict:
+    """The three roofline terms in seconds + bottleneck + usefulness ratio.
+
+    FLOPs/bytes come from the trip-count-exact IR trace; the compiled
+    cost_analysis() numbers are recorded alongside as a per-iteration
+    cross-check (XLA counts while bodies once)."""
+    flops = float(ir["ir_dot_flops"] + ir["ir_ew_flops"])
+    hbm = float(ir["ir_hbm_bytes"])
+    wire = float(ir["collective_wire_bytes"])
+    t_compute = flops / PEAK_FLOPS
+    t_memory = hbm / HBM_BW
+    t_coll = wire / LINK_BW
+    # memory term with the Pallas kernels swapped in (attention/SSD internals
+    # stay in VMEM; this path lowers the jnp reference only because Pallas
+    # cannot target the CPU backend — see DESIGN.md §6)
+    t_memory_pallas = max(hbm - float(ir.get("ir_kernel_saved_bytes", 0.0)), 0.0) / HBM_BW
+    terms = {"compute_s": t_compute, "memory_s": t_memory, "collective_s": t_coll}
+    dominant = max(terms, key=terms.get)
+    total = max(t_compute, t_memory, t_coll)
+    return {
+        **terms,
+        "memory_s_pallas": t_memory_pallas,
+        "roofline_fraction_pallas": (
+            (model_flops_per_device / PEAK_FLOPS)
+            / max(t_compute, t_memory_pallas, t_coll)
+            if max(t_compute, t_memory_pallas, t_coll) else None
+        ),
+        "dominant": dominant,
+        "ir_flops": flops,
+        "ir_hbm_bytes": hbm,
+        "hlo_flops_per_iter": float(cost.get("flops", 0.0)),
+        "hlo_bytes_per_iter": float(cost.get("bytes accessed", 0.0)),
+        "model_flops_per_device": model_flops_per_device,
+        "useful_flop_ratio": (model_flops_per_device / flops) if flops else None,
+        "roofline_fraction": (model_flops_per_device / PEAK_FLOPS) / total if total else None,
+    }
+
+
+def parse_hlo_collectives(hlo_text: str) -> dict:
+    """Cross-check: count collective op instances in compiled HLO text
+    (NOT multiplied by loop trip counts — see collect_ir_stats for the
+    authoritative numbers)."""
+    counts: dict[str, int] = {}
+    for m in re.finditer(r"=\s*\S+\s+(all-reduce|all-gather|reduce-scatter|"
+                         r"all-to-all|collective-permute)\b", hlo_text):
+        counts[m.group(1)] = counts.get(m.group(1), 0) + 1
+    return counts

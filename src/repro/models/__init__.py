@@ -1,0 +1,6 @@
+"""Composable pure-JAX model zoo: dense/GQA transformers, MoE, Mamba-2 SSD,
+hybrid interleaves, encoder-only and VLM backbones — all driven by
+``repro.configs.ArchConfig`` and parallelized through ``ParallelCtx``."""
+from .model import Model
+
+__all__ = ["Model"]

@@ -1,0 +1,177 @@
+"""Feed-forward blocks: dense GLU/GELU MLPs and capacity-based top-k MoE with
+expert parallelism.
+
+MoE dispatch is sort-free (cumsum positions + scatter into per-expert
+capacity buffers), deterministic-shape, and EP-aware: each rank materializes
+only its local experts' buffers; the per-token combine is a partial sum
+discharged by one psum over the expert axis.  Padded experts (e.g. granite
+40 -> 48) are masked out in the router.
+"""
+from __future__ import annotations
+
+import math
+
+import jax
+import jax.numpy as jnp
+
+from repro.parallel.ctx import ParallelCtx
+
+from .modules import ACTS, linear, linear_init, _init
+
+
+def mlp_init(key, cfg, d_ff: int, *, stacked: tuple = (), dtype=jnp.bfloat16):
+    ks = jax.random.split(key, 3)
+    if cfg.mlp_act in ("swiglu", "geglu"):
+        return {
+            "wg": linear_init(ks[0], cfg.d_model, d_ff, dtype=dtype, stacked=stacked),
+            "wu": linear_init(ks[1], cfg.d_model, d_ff, dtype=dtype, stacked=stacked),
+            "wo": linear_init(ks[2], d_ff, cfg.d_model, dtype=dtype, stacked=stacked),
+        }
+    return {
+        "wi": linear_init(ks[0], cfg.d_model, d_ff, dtype=dtype, stacked=stacked),
+        "wo": linear_init(ks[2], d_ff, cfg.d_model, dtype=dtype, stacked=stacked),
+    }
+
+
+def mlp_fwd(cfg, ctx: ParallelCtx, p, x):
+    """Dense MLP: column-parallel in, row-parallel out, one psum."""
+    if cfg.mlp_act == "swiglu":
+        h = jax.nn.silu(linear(p["wg"], x)) * linear(p["wu"], x)
+    elif cfg.mlp_act == "geglu":
+        h = jax.nn.gelu(linear(p["wg"], x)) * linear(p["wu"], x)
+    else:
+        h = ACTS[cfg.mlp_act](linear(p["wi"], x))
+    y = linear(p["wo"], h)
+    return ctx.sp_enter(y)
+
+
+# ---------------------------------------------------------------------------
+# Mixture of Experts
+
+
+def moe_init(key, cfg, *, stacked: tuple = (), dtype=jnp.bfloat16):
+    E, D, F = cfg.experts, cfg.d_model, cfg.d_ff_expert
+    ks = jax.random.split(key, 5)
+    p = {
+        "router": {"w": _init(ks[0], (*stacked, D, E), 1.0 / math.sqrt(D), jnp.float32)},
+        "wg": _init(ks[1], (*stacked, E, D, F), 1.0 / math.sqrt(D), dtype),
+        "wu": _init(ks[2], (*stacked, E, D, F), 1.0 / math.sqrt(D), dtype),
+        "wo": _init(ks[3], (*stacked, E, F, D), 1.0 / math.sqrt(F), dtype),
+    }
+    if cfg.shared_expert_ff:
+        p["shared"] = mlp_init(ks[4], cfg, cfg.shared_expert_ff, stacked=stacked, dtype=dtype)
+    return p
+
+
+def moe_capacity(cfg, tokens: int) -> int:
+    return int(math.ceil(tokens * cfg.top_k / cfg.experts * cfg.capacity_factor))
+
+
+def moe_fwd(cfg, ctx: ParallelCtx, p, x):
+    """Top-k routed MoE.  x: (B, S, D) (replicated across the expert axis).
+
+    Returns the combined expert output (+ shared expert), a replicated tensor
+    after the expert-axis psum.
+    """
+    B, S, D = x.shape
+    T = B * S
+    E = cfg.experts
+    K = cfg.top_k
+    C = moe_capacity(cfg, T)
+    xf = x.reshape(T, D)
+
+    logits = (xf.astype(jnp.float32) @ p["router"]["w"]).astype(jnp.float32)
+    if cfg.n_experts_padded and cfg.n_experts_padded > cfg.n_experts:
+        pad_mask = jnp.arange(E) >= cfg.n_experts
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, K)  # (T, K)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)  # renormalize top-k
+
+    # flatten (token, slot) pairs and compute per-expert positions
+    eid = idx.reshape(T * K)
+    wflat = w.reshape(T * K).astype(x.dtype)
+    onehot = jax.nn.one_hot(eid, E, dtype=jnp.int32)  # (TK, E)
+    pos = (jnp.cumsum(onehot, axis=0) * onehot).sum(-1) - 1  # (TK,)
+    keep = pos < C
+
+    # expert parallelism: this rank owns experts [r*E_loc, (r+1)*E_loc)
+    ep = ctx.ep_size if ctx.ep_axis else 1
+    E_loc = E // ep
+    first = (jax.lax.axis_index(ctx.ep_axis) if ctx.ep_axis else 0) * E_loc
+    local = (eid >= first) & (eid < first + E_loc) & keep
+    slot = jnp.where(local, (eid - first) * C + pos, E_loc * C)  # overflow slot
+
+    tok = jnp.arange(T * K) // K
+    buf = jnp.zeros((E_loc * C + 1, D), x.dtype).at[slot].set(xf[tok])
+    ein = buf[: E_loc * C].reshape(E_loc, C, D)
+
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", ein, p["wg"])) * jnp.einsum(
+        "ecd,edf->ecf", ein, p["wu"]
+    )
+    eout = jnp.einsum("ecf,efd->ecd", h, p["wo"])  # (E_loc, C, D)
+
+    flat = jnp.concatenate([eout.reshape(E_loc * C, D), jnp.zeros((1, D), x.dtype)])
+    contrib = flat[slot] * (wflat * local.astype(wflat.dtype))[:, None]
+    y = jnp.zeros((T, D), x.dtype).at[tok].add(contrib)  # partial over expert axis
+    if ctx.ep_axis:
+        y = jax.lax.psum(y, ctx.ep_axis)
+    y = y.reshape(B, S, D)
+    if "shared" in p:
+        # shared expert is column/row TP-sharded like a dense MLP: its output
+        # is a partial sum and needs its own reduction (this exact missing
+        # psum was caught by the verifier — see EXPERIMENTS.md §Bugs)
+        y = y + ctx.psum_tp(_shared_fwd(cfg, p["shared"], x))
+    if ctx.sp and ctx.tp_axis:
+        # under SP the caller expects a sequence-sharded activation; y is
+        # replicated here so the local shard is just a slice
+        chunk = S // ctx.tp_size
+        r = jax.lax.axis_index(ctx.tp_axis)
+        y = jax.lax.dynamic_slice_in_dim(y, r * chunk, chunk, axis=1)
+    return y
+
+
+def moe_dense_fwd(cfg, ctx: ParallelCtx, p, x):
+    """Dense-masked MoE formulation: every expert computes every token and a
+    top-k weight mask combines them.  Numerically equals capacity-MoE with
+    infinite capacity; cost O(E/topk) higher — used for the *verification*
+    graphs (static dataflow: all ops are einsums over the expert dim, TP
+    shards the expert FFN width, one psum discharges).  The execution path
+    stays the capacity dispatch (moe_fwd)."""
+    B, S, D = x.shape
+    T = B * S
+    E = cfg.experts
+    K = cfg.top_k
+    xf = x.reshape(T, D)
+    logits = (xf.astype(jnp.float32) @ p["router"]["w"]).astype(jnp.float32)
+    if cfg.n_experts_padded and cfg.n_experts_padded > cfg.n_experts:
+        pad_mask = jnp.arange(E) >= cfg.n_experts
+        logits = jnp.where(pad_mask[None, :], -1e30, logits)
+    probs = jax.nn.softmax(logits, axis=-1)
+    w, idx = jax.lax.top_k(probs, K)
+    w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
+    dense_w = jnp.zeros((T, E), jnp.float32)
+    tok = jnp.arange(T)[:, None].repeat(K, 1)
+    dense_w = dense_w.at[tok.reshape(-1), idx.reshape(-1)].add(w.reshape(-1))
+    dense_w = dense_w.astype(x.dtype)
+
+    h = jax.nn.silu(jnp.einsum("td,edf->tef", xf, p["wg"])) * jnp.einsum(
+        "td,edf->tef", xf, p["wu"])
+    eout = jnp.einsum("tef,efd->ted", h, p["wo"])  # partial over sharded f
+    y = jnp.einsum("ted,te->td", eout, dense_w)
+    if ctx.tp_axis:
+        y = jax.lax.psum(y, ctx.tp_axis)
+    y = y.reshape(B, S, D)
+    if "shared" in p:
+        y = y + ctx.psum_tp(_shared_fwd(cfg, p["shared"], x))
+    return y
+
+
+def _shared_fwd(cfg, p, x):
+    if cfg.mlp_act == "geglu":
+        h = jax.nn.gelu(linear(p["wg"], x)) * linear(p["wu"], x)
+    elif "wg" in p:
+        h = jax.nn.silu(linear(p["wg"], x)) * linear(p["wu"], x)
+    else:
+        h = ACTS[cfg.mlp_act](linear(p["wi"], x))
+    return linear(p["wo"], h)

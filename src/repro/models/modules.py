@@ -1,0 +1,106 @@
+"""Primitive modules (functional): init + apply pairs over plain dict params."""
+from __future__ import annotations
+
+import math
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+
+def _init(key, shape, scale: Optional[float] = None, dtype=jnp.bfloat16):
+    scale = scale if scale is not None else 1.0 / math.sqrt(shape[0] if shape else 1)
+    return (jax.random.normal(key, shape, jnp.float32) * scale).astype(dtype)
+
+
+def linear_init(key, d_in: int, d_out: int, *, bias: bool = False, dtype=jnp.bfloat16,
+                stacked: tuple = ()):
+    kw, kb = jax.random.split(key)
+    p = {"w": _init(kw, (*stacked, d_in, d_out), 1.0 / math.sqrt(d_in), dtype)}
+    if bias:
+        p["b"] = jnp.zeros((*stacked, d_out), dtype)
+    return p
+
+
+def linear(p, x):
+    y = x @ p["w"]
+    if "b" in p:
+        y = y + p["b"]
+    return y
+
+
+def rmsnorm_init(key, d: int, dtype=jnp.bfloat16, stacked: tuple = ()):
+    del key
+    return {"s": jnp.ones((*stacked, d), dtype)}
+
+
+def rmsnorm(p, x, eps: float = 1e-5):
+    dt = x.dtype
+    xf = x.astype(jnp.float32)
+    var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+    return (xf * jax.lax.rsqrt(var + eps)).astype(dt) * p["s"]
+
+
+def gated_rmsnorm(p, x, z, eps: float = 1e-5, group: int = 0):
+    """Mamba-2 style RMSNormGated: norm(x * silu(z)) * scale.
+
+    ``group`` > 0 normalizes over groups of that many channels (we use one
+    group per SSD head) — the grouped form is invariant under head-aligned
+    tensor parallelism, unlike a full-width norm over a sharded dim (the
+    standard Mamba-2 TP adaptation; DESIGN.md §4.1)."""
+    dt = x.dtype
+    xf = (x * jax.nn.silu(z.astype(jnp.float32)).astype(x.dtype)).astype(jnp.float32)
+    if group and group < xf.shape[-1]:
+        shp = xf.shape
+        xg = xf.reshape(*shp[:-1], shp[-1] // group, group)
+        var = jnp.mean(xg * xg, axis=-1, keepdims=True)
+        xf = (xg * jax.lax.rsqrt(var + eps)).reshape(shp)
+    else:
+        var = jnp.mean(xf * xf, axis=-1, keepdims=True)
+        xf = xf * jax.lax.rsqrt(var + eps)
+    return xf.astype(dt) * p["s"]
+
+
+def embed_init(key, vocab: int, d: int, dtype=jnp.bfloat16):
+    return {"w": _init(key, (vocab, d), 1.0, dtype)}
+
+
+# -- rotary position embeddings ----------------------------------------------------
+
+
+def rope_angles(positions, rot_dim: int, theta: float):
+    """(..., rot_dim/2) angle table for given integer positions."""
+    inv = 1.0 / (theta ** (jnp.arange(0, rot_dim, 2, dtype=jnp.float32) / rot_dim))
+    ang = positions.astype(jnp.float32)[..., None] * inv  # (..., rot/2)
+    return jnp.cos(ang), jnp.sin(ang)
+
+
+def apply_rope(x, positions, fraction: float = 1.0, theta: float = 10_000.0):
+    """Rotate-half RoPE on the leading ``fraction`` of the head dim.
+
+    x: (B, H, S, hd); positions: (S,) or (B, S) or scalar-like broadcast.
+    chatglm3's 2d RoPE is realized as fraction=0.5 (see DESIGN.md §2).
+    """
+    hd = x.shape[-1]
+    rot = int(hd * fraction)
+    rot -= rot % 2
+    if rot == 0:
+        return x
+    cos, sin = rope_angles(positions, rot, theta)  # (S, rot/2) or (B,S,rot/2)
+    while cos.ndim < x.ndim - 1:  # align to (B, H, S, rot/2)
+        cos, sin = cos[None], sin[None]
+    xr = x if rot == hd else x[..., :rot]
+    x1, x2 = xr[..., : rot // 2], xr[..., rot // 2 :]
+    cos = cos.astype(x.dtype)
+    sin = sin.astype(x.dtype)
+    out = jnp.concatenate([x1 * cos - x2 * sin, x2 * cos + x1 * sin], axis=-1)
+    if rot == hd:
+        return out
+    return jnp.concatenate([out, x[..., rot:]], axis=-1)
+
+
+ACTS = {
+    "gelu": jax.nn.gelu,
+    "silu": jax.nn.silu,
+    "relu": jax.nn.relu,
+}

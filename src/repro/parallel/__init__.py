@@ -1,0 +1,6 @@
+"""Distributed runtime: mesh-aware parallel context, sharding rules, and
+collective helpers for TP/DP/EP/SP/CP over the production mesh."""
+from .ctx import ParallelCtx
+from .sharding import param_specs, batch_spec
+
+__all__ = ["ParallelCtx", "param_specs", "batch_spec"]

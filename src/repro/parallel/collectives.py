@@ -1,0 +1,27 @@
+"""Shared distributed building blocks with registered verification templates.
+
+Functions here are used by BOTH the model code and the verifier's meta-rule
+template generation — the verifier traces these exact functions to obtain the
+trusted subgraph fingerprints it accepts at "vendor kernel" granularity
+(paper §5.1: partition boundaries "match the scope of vendor-provided
+kernels").  Any mutation of the generated subgraph (bug injection, framework
+regression) changes the fingerprint and the region stays unverified.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+def vp_embed(table, ids, axis: str):
+    """Vocab-parallel embedding: local-chunk lookup + range mask + psum.
+
+    table: (V_loc, D) this rank's vocab rows; ids: integer tokens (any shape).
+    """
+    V_loc = table.shape[0]
+    off = lax.axis_index(axis) * V_loc
+    local = jnp.clip(ids - off, 0, V_loc - 1)
+    x = jnp.take(table, local, axis=0)
+    mask = ((ids >= off) & (ids < off + V_loc))[..., None]
+    return lax.psum(x * mask.astype(x.dtype), axis)

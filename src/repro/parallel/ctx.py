@@ -1,0 +1,133 @@
+"""ParallelCtx: the single switch between single-device and SPMD execution.
+
+Model code is written ONCE against this facade.  With all axes ``None`` the
+context is a no-op and the model is the trusted single-device baseline graph;
+with axes set (inside ``shard_map``) the same code emits explicit collectives
+(psum / all_gather / reduce_scatter / pmax / all_to_all).  The Scalify
+verifier (repro.core) checks that the two graphs are semantically equivalent
+— the framework verifies its own parallelization before running it.
+
+Axis roles over the production mesh (launch/mesh.py):
+  tp   = "model"     tensor parallel (Megatron column/row, vocab-parallel)
+  dp   = "data" (+ "pod" folded in multi-pod DP)  data parallel
+  ep   = usually == tp   expert parallel (experts sharded over model ranks)
+  cp   = "data"      context parallel for long-sequence decode (flash decode)
+  sp   = sequence parallelism toggle (reduce_scatter/all_gather instead of
+         psum around the norm regions — beyond-paper §Perf optimization)
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, replace
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+from jax import lax
+
+
+@dataclass(frozen=True)
+class ParallelCtx:
+    tp_axis: Optional[str] = None
+    dp_axis: Optional[str | tuple] = None
+    ep_axis: Optional[str] = None
+    cp_axis: Optional[str] = None
+    tp_size: int = 1
+    dp_size: int = 1
+    ep_size: int = 1
+    cp_size: int = 1
+    dp_axis_sizes: tuple = ()  # per-axis sizes aligned with dp_axis tuple
+    sp: bool = False  # sequence parallelism (activations seq-sharded over tp)
+
+    # -- constructors ---------------------------------------------------------
+    @staticmethod
+    def single() -> "ParallelCtx":
+        return ParallelCtx()
+
+    @staticmethod
+    def from_mesh(mesh, tp: str = "model", dp="data", sp: bool = False,
+                  cp: Optional[str] = None) -> "ParallelCtx":
+        sizes = dict(zip(mesh.axis_names, mesh.devices.shape)) if hasattr(mesh, "devices") \
+            else dict(zip(mesh.axis_names, mesh.axis_sizes))
+        dp_axes = dp if isinstance(dp, tuple) else (dp,) if dp else ()
+        dp_axes = tuple(a for a in dp_axes if a in sizes)
+        dp_size = 1
+        for a in dp_axes:
+            dp_size *= sizes[a]
+        return ParallelCtx(
+            tp_axis=tp if tp in sizes else None,
+            dp_axis=dp_axes if dp_axes else None,
+            ep_axis=tp if tp in sizes else None,
+            cp_axis=cp if cp and cp in sizes else None,
+            tp_size=sizes.get(tp, 1),
+            dp_size=dp_size,
+            ep_size=sizes.get(tp, 1),
+            cp_size=sizes.get(cp, 1) if cp else 1,
+            dp_axis_sizes=tuple(sizes[a] for a in dp_axes),
+            sp=sp,
+        )
+
+    @property
+    def distributed(self) -> bool:
+        return self.tp_axis is not None or self.dp_axis is not None
+
+    # -- tensor-parallel collectives -----------------------------------------------
+    def psum_tp(self, x):
+        """Discharge a row-parallel partial sum (Megatron g-bar)."""
+        return lax.psum(x, self.tp_axis) if self.tp_axis else x
+
+    def pmax_tp(self, x):
+        return lax.pmax(x, self.tp_axis) if self.tp_axis else x
+
+    def gather_tp(self, x, axis: int):
+        return (
+            lax.all_gather(x, self.tp_axis, axis=axis, tiled=True) if self.tp_axis else x
+        )
+
+    def scatter_tp(self, x, axis: int):
+        """reduce_scatter: partial-sum in, shard out (sequence parallelism)."""
+        return (
+            lax.psum_scatter(x, self.tp_axis, scatter_dimension=axis, tiled=True)
+            if self.tp_axis
+            else x
+        )
+
+    def tp_index(self):
+        return lax.axis_index(self.tp_axis) if self.tp_axis else 0
+
+    # -- sequence-parallel region helpers ---------------------------------------------
+    def sp_enter(self, x, seq_axis: int = 1):
+        """Row-parallel output -> sequence-sharded activation.
+        SP on: reduce_scatter along sequence.  SP off: plain psum."""
+        if not self.tp_axis:
+            return x
+        if self.sp:
+            return lax.psum_scatter(x, self.tp_axis, scatter_dimension=seq_axis, tiled=True)
+        return lax.psum(x, self.tp_axis)
+
+    def sp_exit(self, x, seq_axis: int = 1):
+        """Sequence-sharded activation -> replicated input of a column-parallel
+        region.  SP on: all_gather along sequence.  SP off: identity."""
+        if self.tp_axis and self.sp:
+            return lax.all_gather(x, self.tp_axis, axis=seq_axis, tiled=True)
+        return x
+
+    # -- data-parallel ---------------------------------------------------------------
+    def psum_dp(self, x):
+        if not self.dp_axis:
+            return x
+        return lax.psum(x, self.dp_axis)
+
+    def pmean_dp(self, x):
+        if not self.dp_axis:
+            return x
+        return lax.pmean(x, self.dp_axis)
+
+    # -- context parallel (flash decode over the data axis) -----------------------------
+    def cp_index(self):
+        return lax.axis_index(self.cp_axis) if self.cp_axis else 0
+
+    def psum_cp(self, x):
+        return lax.psum(x, self.cp_axis) if self.cp_axis else x
+
+    def pmax_cp(self, x):
+        return lax.pmax(x, self.cp_axis) if self.cp_axis else x

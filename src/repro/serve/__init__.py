@@ -1,0 +1,4 @@
+"""Serving engine: batched prefill + decode with KV/SSM caches."""
+from .engine import ServeConfig, Engine
+
+__all__ = ["ServeConfig", "Engine"]

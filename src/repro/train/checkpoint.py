@@ -1,0 +1,164 @@
+"""Fault-tolerant checkpointing: step-atomic, zstd-compressed, elastic.
+
+Layout (one directory per step):
+    ckpt_dir/
+      step_000123/
+        meta.json            # tree structure, shapes, dtypes, step, config
+        shard_00000.bin      # zstd(msgpack) chunks of the flattened leaves
+        COMMIT               # written last — absence marks a torn checkpoint
+
+Fault-tolerance contract:
+  * writes go to ``step_X.tmp`` then atomically rename -> partial writes are
+    never visible; ``latest()`` only returns committed steps.
+  * ``restore`` validates shapes against the current model and **reshards
+    elastically**: a checkpoint saved on any mesh loads onto any other mesh
+    (leaves are stored unsharded-logical; resharding is jax.device_put with
+    the new sharding).
+  * ``keep_last`` garbage-collects old steps after a successful commit.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import time
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import jax.numpy as jnp
+import msgpack
+import numpy as np
+import zstandard
+
+_CHUNK = 64 * 1024 * 1024  # shard file target size
+
+
+def _tree_paths(tree) -> list[tuple[str, Any]]:
+    flat = jax.tree_util.tree_flatten_with_path(tree)[0]
+    out = []
+    for path, leaf in flat:
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p)) for p in path
+        )
+        out.append((key, leaf))
+    return out
+
+
+def save(ckpt_dir: str | os.PathLike, step: int, tree, *, keep_last: int = 3,
+         extra_meta: Optional[dict] = None) -> Path:
+    ckpt_dir = Path(ckpt_dir)
+    final = ckpt_dir / f"step_{step:08d}"
+    tmp = ckpt_dir / f"step_{step:08d}.tmp"
+    if tmp.exists():
+        shutil.rmtree(tmp)
+    tmp.mkdir(parents=True)
+
+    leaves = _tree_paths(tree)
+    meta = {
+        "step": step,
+        "time": time.time(),
+        "leaves": [
+            {"key": k, "shape": list(np.shape(v)), "dtype": str(jnp.asarray(v).dtype)}
+            for k, v in leaves
+        ],
+        **(extra_meta or {}),
+    }
+    cctx = zstandard.ZstdCompressor(level=3)
+    shard_idx, buf, sizes = 0, [], 0
+
+    def flush():
+        nonlocal shard_idx, buf, sizes
+        if not buf:
+            return
+        payload = msgpack.packb(buf, use_bin_type=True)
+        with open(tmp / f"shard_{shard_idx:05d}.bin", "wb") as f:
+            f.write(cctx.compress(payload))
+        shard_idx += 1
+        buf, sizes = [], 0
+
+    for k, v in leaves:
+        arr = np.asarray(jax.device_get(v))
+        # bfloat16 has no msgpack/numpy wire format: ship as uint16 view
+        wire_dtype = str(arr.dtype)
+        if wire_dtype == "bfloat16":
+            arr = arr.view(np.uint16)
+        buf.append({"key": k, "dtype": wire_dtype, "shape": list(arr.shape),
+                    "data": arr.tobytes()})
+        sizes += arr.nbytes
+        if sizes >= _CHUNK:
+            flush()
+    flush()
+    with open(tmp / "meta.json", "w") as f:
+        json.dump(meta, f)
+    (tmp / "COMMIT").touch()
+    if final.exists():
+        shutil.rmtree(final)
+    os.rename(tmp, final)
+    _gc(ckpt_dir, keep_last)
+    return final
+
+
+def _gc(ckpt_dir: Path, keep_last: int) -> None:
+    steps = sorted(p for p in ckpt_dir.glob("step_*") if not p.name.endswith(".tmp"))
+    for p in steps[:-keep_last] if keep_last > 0 else []:
+        shutil.rmtree(p, ignore_errors=True)
+
+
+def latest(ckpt_dir: str | os.PathLike) -> Optional[Path]:
+    ckpt_dir = Path(ckpt_dir)
+    if not ckpt_dir.exists():
+        return None
+    steps = sorted(
+        p for p in ckpt_dir.glob("step_*")
+        if not p.name.endswith(".tmp") and (p / "COMMIT").exists()
+    )
+    return steps[-1] if steps else None
+
+
+def restore(path: str | os.PathLike, target_tree, *, shardings=None) -> tuple[Any, dict]:
+    """Load a committed checkpoint into the structure of ``target_tree``.
+
+    ``shardings``: optional pytree of jax.sharding.Sharding — leaves are
+    device_put with them (elastic re-sharding onto a different mesh)."""
+    path = Path(path)
+    with open(path / "meta.json") as f:
+        meta = json.load(f)
+    dctx = zstandard.ZstdDecompressor()
+    loaded: dict[str, np.ndarray] = {}
+    for shard in sorted(path.glob("shard_*.bin")):
+        with open(shard, "rb") as f:
+            items = msgpack.unpackb(dctx.decompress(f.read()), raw=False)
+        for item in items:
+            arr = np.frombuffer(
+                item["data"],
+                dtype=np.uint16 if item["dtype"] == "bfloat16" else item["dtype"],
+            ).reshape(item["shape"])
+            if item["dtype"] == "bfloat16":
+                arr = arr.view(jnp.bfloat16)
+            loaded[item["key"]] = arr
+
+    flat, treedef = jax.tree_util.tree_flatten_with_path(target_tree)
+    shard_flat = (
+        jax.tree_util.tree_leaves(
+            shardings, is_leaf=lambda x: hasattr(x, "device_set") or hasattr(x, "spec"))
+        if shardings is not None
+        else [None] * len(flat)
+    )
+    out = []
+    for (pathk, ref), shd in zip(flat, shard_flat):
+        key = "/".join(
+            str(p.key) if hasattr(p, "key") else str(getattr(p, "idx", p)) for p in pathk
+        )
+        if key not in loaded:
+            raise KeyError(f"checkpoint missing leaf {key}")
+        arr = loaded[key]
+        if tuple(arr.shape) != tuple(np.shape(ref)):
+            raise ValueError(
+                f"shape mismatch for {key}: ckpt {arr.shape} vs model {np.shape(ref)}"
+            )
+        val = jnp.asarray(arr)
+        if shd is not None:
+            val = jax.device_put(val, shd)
+        out.append(val)
+    return jax.tree_util.tree_unflatten(treedef, out), meta

@@ -1,0 +1,114 @@
+"""Property tests for the symbolic layout bijections (Algorithm 2 core).
+
+The invariant: a Layout built from any random split/merge-reshape +
+transpose sequence must APPLY identically to numpy's reshape/transpose;
+composition, inversion and equivalence must agree with concrete arrays.
+"""
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from repro.core.bijection import Layout, NotSplitMerge, infer_bijection, layout_of_ops
+
+_DIM = st.sampled_from([1, 2, 3, 4, 6, 8])
+
+
+@st.composite
+def shapes(draw, max_rank=4):
+    rank = draw(st.integers(1, max_rank))
+    return tuple(draw(_DIM) for _ in range(rank))
+
+
+@st.composite
+def op_sequences(draw):
+    """A random valid sequence of transposes and split/merge reshapes."""
+    shape = draw(shapes())
+    ops = []
+    cur = shape
+    rng = np.random.default_rng(draw(st.integers(0, 2**31)))
+    for _ in range(draw(st.integers(0, 5))):
+        if draw(st.booleans()):
+            perm = tuple(rng.permutation(len(cur)).tolist())
+            ops.append(("transpose", perm))
+            cur = tuple(cur[p] for p in perm)
+        else:
+            total = int(np.prod(cur))
+            fs = []
+            rem = total
+            while rem > 1:
+                divs = [d for d in range(2, min(rem, 9) + 1) if rem % d == 0]
+                if not divs or (fs and rng.random() < 0.3):
+                    fs.append(rem)
+                    break
+                d = int(rng.choice(divs))
+                fs.append(d)
+                rem //= d
+            new = tuple(fs) or (1,)
+            ops.append(("reshape", new))
+            cur = new
+    return shape, ops
+
+
+@given(op_sequences())
+@settings(max_examples=200, deadline=None)
+def test_layout_matches_numpy(case):
+    shape, ops = case
+    x = np.arange(int(np.prod(shape))).reshape(shape)
+    lay = Layout.identity(shape)
+    y = x
+    for op, arg in ops:
+        try:
+            lay = lay.then(op, arg)
+        except NotSplitMerge:
+            return  # crossing-boundary reshape: out of the verified fragment
+        y = y.transpose(arg) if op == "transpose" else y.reshape(arg)
+    np.testing.assert_array_equal(lay.apply(x), y)
+
+
+@given(op_sequences())
+@settings(max_examples=150, deadline=None)
+def test_inverse_roundtrip(case):
+    shape, ops = case
+    lay = layout_of_ops(shape, ops)
+    if lay is None:
+        return
+    x = np.arange(int(np.prod(shape))).reshape(shape)
+    inv = lay.inverse()
+    np.testing.assert_array_equal(inv.apply(lay.apply(x)), x)
+    assert lay.compose(inv).equivalent(Layout.identity(shape))
+
+
+@given(op_sequences(), op_sequences())
+@settings(max_examples=100, deadline=None)
+def test_infer_bijection_repairs(case_a, case_b):
+    """Algorithm 2: the synthesized repair maps the distributed result onto
+    the baseline result, for any two layout paths from the same source."""
+    shape, ops_a = case_a
+    _, ops_b = case_b
+    base = layout_of_ops(shape, ops_a)
+    dist = layout_of_ops(shape, ops_b)
+    if base is None or dist is None:
+        return
+    fix = infer_bijection(base, dist)
+    if fix is None:
+        return
+    x = np.arange(int(np.prod(shape))).reshape(shape)
+    y = dist.apply(x)
+    for op, arg in fix:
+        y = y.reshape(arg) if op == "reshape" else y.transpose(arg)
+    np.testing.assert_array_equal(y, base.apply(x))
+
+
+@given(op_sequences())
+@settings(max_examples=100, deadline=None)
+def test_equivalence_is_semantic(case):
+    """Two different op sequences with the same effect are `equivalent`."""
+    shape, ops = case
+    lay = layout_of_ops(shape, ops)
+    if lay is None:
+        return
+    # re-derive via the synthesized canonical ops: must be equivalent
+    canon = layout_of_ops(shape, lay.synthesize_ops())
+    assert canon is not None
+    assert lay.equivalent(canon)
+    x = np.arange(int(np.prod(shape))).reshape(shape)
+    np.testing.assert_array_equal(lay.apply(x), canon.apply(x))

@@ -1,0 +1,109 @@
+"""Checkpointing + fault tolerance: roundtrip, atomicity under torn writes,
+elastic resume, deterministic data replay."""
+import os
+import shutil
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+
+from repro.data import DataConfig, SyntheticLM
+from repro.train import checkpoint as ckpt
+
+
+def _tree(key):
+    ks = jax.random.split(key, 3)
+    return {
+        "a": {"w": jax.random.normal(ks[0], (16, 8), jnp.bfloat16)},
+        "b": [jax.random.normal(ks[1], (4,), jnp.float32),
+              jax.random.normal(ks[2], (2, 2), jnp.float32)],
+        "step": jnp.int32(7),
+    }
+
+
+def test_roundtrip(tmp_path):
+    t = _tree(jax.random.PRNGKey(0))
+    ckpt.save(tmp_path, 3, t)
+    latest = ckpt.latest(tmp_path)
+    assert latest is not None and latest.name == "step_00000003"
+    restored, meta = ckpt.restore(latest, jax.eval_shape(lambda: t))
+    assert meta["step"] == 3
+    for a, b in zip(jax.tree_util.tree_leaves(t), jax.tree_util.tree_leaves(restored)):
+        np.testing.assert_array_equal(np.asarray(a, np.float32), np.asarray(b, np.float32))
+
+
+def test_torn_write_invisible(tmp_path):
+    t = _tree(jax.random.PRNGKey(1))
+    ckpt.save(tmp_path, 1, t)
+    # simulate a crash mid-write of step 2: directory without COMMIT
+    torn = tmp_path / "step_00000002"
+    torn.mkdir()
+    (torn / "meta.json").write_text("{}")
+    assert ckpt.latest(tmp_path).name == "step_00000001"
+
+
+def test_gc_keeps_last(tmp_path):
+    t = _tree(jax.random.PRNGKey(2))
+    for s in range(5):
+        ckpt.save(tmp_path, s, t, keep_last=2)
+    steps = sorted(p.name for p in tmp_path.glob("step_*"))
+    assert steps == ["step_00000003", "step_00000004"]
+
+
+def test_shape_mismatch_rejected(tmp_path):
+    t = _tree(jax.random.PRNGKey(3))
+    ckpt.save(tmp_path, 0, t)
+    bad = dict(t)
+    bad["a"] = {"w": jnp.zeros((8, 8), jnp.bfloat16)}
+    with pytest.raises(ValueError, match="shape mismatch"):
+        ckpt.restore(ckpt.latest(tmp_path), jax.eval_shape(lambda: bad))
+
+
+def test_elastic_restore_resharding(tmp_path):
+    """A checkpoint written from one layout loads under a different sharding
+    (device_put with new shardings) — single-device CPU degenerates to a
+    placement no-op but exercises the code path."""
+    t = _tree(jax.random.PRNGKey(4))
+    ckpt.save(tmp_path, 9, t)
+    shardings = jax.tree_util.tree_map(
+        lambda _: jax.sharding.SingleDeviceSharding(jax.devices()[0]), t)
+    restored, _ = ckpt.restore(ckpt.latest(tmp_path), jax.eval_shape(lambda: t),
+                               shardings=shardings)
+    np.testing.assert_array_equal(
+        np.asarray(restored["a"]["w"], np.float32), np.asarray(t["a"]["w"], np.float32))
+
+
+def test_data_pipeline_deterministic_replay():
+    """Restoring at step k replays the exact batch stream (resumability)."""
+    cfg = DataConfig(vocab=128, seq_len=32, global_batch=8, seed=5)
+    d1 = SyntheticLM(cfg)
+    d2 = SyntheticLM(cfg)
+    for step in (0, 3, 17):
+        b1 = d1.batch_at(step, shard=1, n_shards=2)
+        b2 = d2.batch_at(step, shard=1, n_shards=2)
+        np.testing.assert_array_equal(np.asarray(b1["tokens"]), np.asarray(b2["tokens"]))
+    # different shards are disjoint streams
+    a = d1.batch_at(0, shard=0, n_shards=2)["tokens"]
+    b = d1.batch_at(0, shard=1, n_shards=2)["tokens"]
+    assert not np.array_equal(np.asarray(a), np.asarray(b))
+
+
+def test_markov_data_is_learnable_signal():
+    """The synthetic stream must be compressible (loss << uniform)."""
+    cfg = DataConfig(vocab=64, seq_len=64, global_batch=4, seed=0)
+    data = SyntheticLM(cfg)
+    b = data.batch_at(0)
+    toks = np.asarray(b["tokens"])
+    # bigram statistics should be concentrated: top-8 continuations cover most mass
+    pairs = {}
+    for row in toks:
+        for a, c in zip(row[:-1], row[1:]):
+            pairs.setdefault(int(a), []).append(int(c))
+    fracs = []
+    for a, cs in pairs.items():
+        vals, counts = np.unique(cs, return_counts=True)
+        if counts.sum() >= 8:
+            fracs.append(np.sort(counts)[::-1][:8].sum() / counts.sum())
+    assert np.mean(fracs) > 0.7, np.mean(fracs)

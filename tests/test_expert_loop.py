@@ -1,0 +1,98 @@
+"""Unrolled expert-parallel loop verification (paper Fig. 8 / Mixtral EP).
+
+The distributed graph computes each rank's local experts as an unrolled loop
+of slices and adds, discharged by one all_reduce — the paper's
+``slice``/``loop_red_B``/``loop_red_D`` relation family.  The verifier must
+relate per-device slice chunks (different baseline slices at different
+ranks!) through the accumulation and discharge it against the baseline
+add-chain over all experts."""
+import numpy as np
+import pytest
+
+from repro.core.ir import Graph
+from repro.core.relations import DUP, LOOPRED, SLICEGRP
+from repro.core.rules import Propagator
+
+C = 4  # ranks
+E = 8  # experts (E_loc = 2)
+T, D = 6, 10
+DN = (((1,), (0,)), ((), ()))
+
+
+def _expert_graphs(drop_term: bool = False, wrong_index: bool = False):
+    """Baseline: out = sum_e X @ W[e].  Distributed: each rank sums its local
+    slices of the expert-stacked weights, then all_reduce."""
+    gb = Graph("base")
+    x = gb.add("input", (), (T, D), "float64")
+    w = gb.add("param", (), (E, D, D), "float64")  # expert-stacked
+    terms = []
+    for e in range(E):
+        sl = gb.add("slice", [w], (1, D, D), "float64",
+                    {"start_indices": (e, 0, 0), "limit_indices": (e + 1, D, D),
+                     "strides": None})
+        terms.append(sl)
+    acc = None
+    for e in range(E):
+        if acc is None:
+            acc = terms[0]
+        else:
+            acc = gb.add("add", [acc, terms[e]], (1, D, D), "float64")
+    # (test exercises the relation machinery on the weight accumulation —
+    # x kept for realism of the surrounding graph)
+    gb.mark_output(acc)
+
+    gd = Graph("dist")
+    xd = gd.add("input", (), (T, D), "float64")
+    wd = gd.add("param", (), (E // C, D, D), "float64")  # expert-sharded
+    E_loc = E // C
+    dacc = None
+    for i in range(E_loc):
+        idx = i
+        if wrong_index and i == 1:
+            idx = 0  # accumulate the same local expert twice (silent bug)
+        sl = gd.add("slice", [wd], (1, D, D), "float64",
+                    {"start_indices": (idx, 0, 0), "limit_indices": (idx + 1, D, D),
+                     "strides": None}, src=f"moe_loop.py:{10+i}")
+        if drop_term and i == E_loc - 1:
+            continue
+        dacc = sl if dacc is None else gd.add(
+            "add", [dacc, sl], (1, D, D), "float64", src="moe_loop.py:20")
+    red = gd.add("all_reduce", [dacc], (1, D, D), "float64",
+                 {"reduce_op": "add", "axes": ("model",)}, src="moe_loop.py:30")
+    gd.mark_output(red)
+    return gb, gd, (x, w), (xd, wd)
+
+
+def test_unrolled_expert_loop_verifies():
+    gb, gd, (x, w), (xd, wd) = _expert_graphs()
+    p = Propagator(gb, gd, C)
+    p.register_dup(x, xd)
+    p.register_shard(w, wd, dim=0)
+    p.run()
+    out_facts = p.store.facts(gd.outputs[0])
+    assert any(f.kind == DUP and f.base == gb.outputs[0] for f in out_facts), [
+        f.short() for f in out_facts
+    ]
+    # intermediate relations: slicegrp on the local slices, loopred on the adds
+    kinds = {f.kind for nid in range(len(gd.nodes)) for f in p.store.facts(nid)}
+    assert SLICEGRP in kinds and LOOPRED in kinds
+
+
+def test_unrolled_expert_loop_missing_term_detected():
+    gb, gd, (x, w), (xd, wd) = _expert_graphs(drop_term=True)
+    p = Propagator(gb, gd, C)
+    p.register_dup(x, xd)
+    p.register_shard(w, wd, dim=0)
+    p.run()
+    assert not any(f.kind == DUP and f.base == gb.outputs[0]
+                   for f in p.store.facts(gd.outputs[0]))
+
+
+def test_unrolled_expert_loop_duplicate_index_detected():
+    gb, gd, (x, w), (xd, wd) = _expert_graphs(wrong_index=True)
+    p = Propagator(gb, gd, C)
+    p.register_dup(x, xd)
+    p.register_shard(w, wd, dim=0)
+    p.run()
+    assert not any(f.kind == DUP and f.base == gb.outputs[0]
+                   for f in p.store.facts(gd.outputs[0]))
