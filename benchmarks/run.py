@@ -4,12 +4,21 @@ from __future__ import annotations
 
 import sys
 import traceback
+from pathlib import Path
+
+# make `benchmarks.*` and `repro` importable when invoked as
+# `python benchmarks/run.py` from the repo root
+_ROOT = Path(__file__).resolve().parent.parent
+for p in (str(_ROOT), str(_ROOT / "src")):
+    if p not in sys.path:
+        sys.path.insert(0, p)
 
 
 def main() -> None:
     from benchmarks import (
         bench_bug_detection,
         bench_memoization,
+        bench_propagation,
         bench_roofline,
         bench_scalability,
         bench_verification,
@@ -19,6 +28,7 @@ def main() -> None:
         ("verification(Table2)", bench_verification),
         ("scalability(Fig11)", bench_scalability),
         ("memoization(Fig12)", bench_memoization),
+        ("propagation(worklist)", bench_propagation),
         ("bug_detection(Tables4-5)", bench_bug_detection),
         ("roofline(Roofline)", bench_roofline),
     ]

@@ -1,0 +1,8 @@
+"""Make ``repro`` importable from ``src/`` without an installed package or a
+manual PYTHONPATH prefix (``python -m pytest`` just works)."""
+import sys
+from pathlib import Path
+
+_SRC = str(Path(__file__).resolve().parent / "src")
+if _SRC not in sys.path:
+    sys.path.insert(0, _SRC)

@@ -47,9 +47,9 @@ print(report.summary())
 assert report.verified
 
 print("\n=== 2. inject a missing all-reduce and catch it ===")
-from jax.sharding import AbstractMesh
+from repro.compat import abstract_mesh
 
-mesh = AbstractMesh((TP,), ("model",))
+mesh = abstract_mesh((TP,), ("model",))
 gb, b_in, _ = trace(baseline, *avals, name="base")
 gd, d_in, _ = trace_sharded(distributed, mesh, specs, P(), *avals)
 bug = drop_all_reduce(gd, index=1)

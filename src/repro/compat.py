@@ -1,0 +1,32 @@
+"""Version-tolerance shims for the jax API surface this repo touches.
+
+The code targets the current jax spellings (``jax.shard_map`` with
+``check_vma``, ``AbstractMesh(axis_sizes, axis_names)``); older jax
+releases (0.4.x) spell these ``jax.experimental.shard_map.shard_map`` with
+``check_rep`` and ``AbstractMesh(shape_tuple)``.  Route every use through
+this module so the verifier runs unmodified on both."""
+from __future__ import annotations
+
+import jax
+
+
+def shard_map(f, *, mesh, in_specs, out_specs, check_vma: bool = False):
+    """``jax.shard_map`` with graceful fallback to the experimental API."""
+    if hasattr(jax, "shard_map"):
+        return jax.shard_map(f, mesh=mesh, in_specs=in_specs,
+                             out_specs=out_specs, check_vma=check_vma)
+    from jax.experimental.shard_map import shard_map as _shard_map
+
+    return _shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                      check_rep=check_vma)
+
+
+def abstract_mesh(axis_sizes, axis_names):
+    """``AbstractMesh(axis_sizes, axis_names)`` on current jax;
+    ``AbstractMesh((name, size), ...)`` on 0.4.x."""
+    from jax.sharding import AbstractMesh
+
+    try:
+        return AbstractMesh(tuple(axis_sizes), tuple(axis_names))
+    except TypeError:
+        return AbstractMesh(tuple(zip(axis_names, axis_sizes)))

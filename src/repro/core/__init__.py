@@ -14,7 +14,7 @@ from .inject import ALL_INJECTORS, Injection, inject_all
 from .ir import Graph, Node
 from .partition import PartitionedVerifier, partition_layers, topological_stages
 from .relations import DUP, PARTIAL, SHARD, Fact, RelStore
-from .rules import Propagator
+from .rules import DEFAULT_REGISTRY, Propagator, RuleRegistry, WorklistEngine
 from .trace import trace, trace_sharded
 from .verifier import (
     BugSite,
@@ -31,6 +31,7 @@ __all__ = [
     "Layout", "NotSplitMerge", "infer_bijection", "layout_of_ops",
     "EGraph", "GraphEGraph", "Graph", "Node",
     "DUP", "SHARD", "PARTIAL", "Fact", "RelStore", "Propagator",
+    "DEFAULT_REGISTRY", "RuleRegistry", "WorklistEngine",
     "PartitionedVerifier", "partition_layers", "topological_stages",
     "trace", "trace_sharded",
     "BugSite", "InputFact", "OutputSpec", "Report", "VerifyOptions",

@@ -151,14 +151,22 @@ class Graph:
     def __iter__(self) -> Iterator[Node]:
         return iter(self.nodes)
 
-    def consumers(self, nid: int) -> list[int]:
+    def consumer_index(self) -> dict[int, list[int]]:
+        """Precomputed consumer adjacency (node id -> consumer node ids).
+
+        Built once per graph mutation epoch; the worklist engine walks it on
+        every derived fact, so callers may hold the returned dict directly
+        while the graph is static."""
         if self._consumers is None:
             cons: dict[int, list[int]] = {}
             for n in self.nodes:
                 for i in n.inputs:
                     cons.setdefault(i, []).append(n.id)
             self._consumers = cons
-        return self._consumers.get(nid, [])
+        return self._consumers
+
+    def consumers(self, nid: int) -> list[int]:
+        return self.consumer_index().get(nid, [])
 
     def toposort(self, roots: Optional[Iterable[int]] = None) -> list[int]:
         """Node ids in topological order (ids are already topological since

@@ -22,7 +22,9 @@ from typing import Optional
 
 import jax
 import jax.numpy as jnp
-from jax.sharding import AbstractMesh, PartitionSpec as P
+from jax.sharding import PartitionSpec as P
+
+from repro.compat import abstract_mesh
 
 from repro.configs import get_config
 from repro.models import Model
@@ -76,7 +78,7 @@ def verify_model_tp(
         cfg = dataclasses.replace(cfg, n_layers=n_layers)
     # keep verification traces lean: tiny attention chunks are irrelevant to
     # graph structure at small seq
-    mesh = AbstractMesh((tp,), ("model",))
+    mesh = abstract_mesh((tp,), ("model",))
     ctx = ParallelCtx(tp_axis="model", tp_size=tp, ep_axis="model", ep_size=tp)
     model_s = Model(cfg, ParallelCtx.single(), moe_impl="dense")
     model_d = Model(cfg, ctx, moe_impl="dense")
@@ -149,7 +151,7 @@ def verify_decode_tp(
         cfg = dataclasses.replace(cfg, n_layers=n_layers)
     if cfg.encoder_only:
         raise ValueError(f"{arch} is encoder-only: no decode step")
-    mesh = AbstractMesh((tp,), ("model",))
+    mesh = abstract_mesh((tp,), ("model",))
     ctx = ParallelCtx(tp_axis="model", tp_size=tp, ep_axis="model", ep_size=tp)
     model_s = Model(cfg, ParallelCtx.single(), moe_impl="dense")
     model_d = Model(cfg, ctx, moe_impl="dense")

@@ -99,10 +99,12 @@ class PartitionedVerifier:
     """Runs Algorithm 1: per-layer-pair registration, staged parallel
     rewriting, memoized replay for repeated layers."""
 
-    def __init__(self, prop: Propagator, parallel_workers: int = 0, memoize: bool = True):
+    def __init__(self, prop: Propagator, parallel_workers: int = 0, memoize: bool = True,
+                 engine=None):
         self.prop = prop
         self.workers = parallel_workers
         self.memoize = memoize
+        self.engine = engine  # WorklistEngine: semi-naive per-layer rewriting
         self.stats = MemoStats()
         # memo: fingerprint -> (base_nodes, dist_nodes, [fact templates])
         self._memo: dict[tuple, tuple[list[int], list[int], list[Fact]]] = {}
@@ -184,9 +186,6 @@ class PartitionedVerifier:
                 self.stats.memo_hits += 1
                 self._replay(self._memo[fp], plan)
                 continue
-            before_keys = {
-                k for k, v in self.prop.store.by_dist.items() if v and k in set(plan.dist_nodes)
-            }
             self._rewrite_layer(plan)
             if fp is not None:
                 inside_d = set(plan.dist_nodes)
@@ -199,10 +198,14 @@ class PartitionedVerifier:
                     if f.base in inside_b or f.base in ext_b
                 ]
                 self._memo[fp] = (list(plan.base_nodes), list(plan.dist_nodes), facts)
-            del before_keys
         return self.stats
 
     def _rewrite_layer(self, plan: LayerPlan) -> None:
+        if self.engine is not None:
+            # semi-naive worklist: seed the layer's nodes once, then re-visit
+            # only consumers of changed nodes until the layer reaches fixpoint
+            self.engine.run(plan.dist_nodes)
+            return
         stages = topological_stages(self.prop.dist, plan.dist_nodes)
         for _round in range(3):  # fixpoint rounds within the layer
             before = self.prop.store.num_derived

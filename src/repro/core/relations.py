@@ -113,9 +113,15 @@ class RelStore:
     def __init__(self) -> None:
         self.by_dist: dict[int, list[Fact]] = {}
         self.by_base: dict[int, list[Fact]] = {}
+        # (dist, kind) index: rule bodies that consume one fact kind read
+        # this instead of linearly filtering the full per-node lists
+        self.by_dist_kind: dict[tuple[int, str], list[Fact]] = {}
         self._seen: set[tuple] = set()
         self.diagnostics: list[Diagnostic] = []
         self.num_derived = 0
+        # notified with each newly-added fact; the worklist engine hooks in
+        # here to enqueue the dist-graph consumers of the changed node
+        self.listeners: list = []
         # scopes/nodes verified wholesale by a trusted meta rule: their
         # internal nodes are exempt from frontier localization
         self.covered_scopes: set[str] = set()
@@ -128,14 +134,23 @@ class RelStore:
         self._seen.add(k)
         self.by_dist.setdefault(fact.dist, []).append(fact)
         self.by_base.setdefault(fact.base, []).append(fact)
+        self.by_dist_kind.setdefault((fact.dist, fact.kind), []).append(fact)
         self.num_derived += 1
+        for listener in self.listeners:
+            listener(fact)
         return True
 
     def facts(self, dist: int) -> list[Fact]:
         return self.by_dist.get(dist, [])
 
+    def facts_kind(self, dist: int, kind: str) -> list[Fact]:
+        return self.by_dist_kind.get((dist, kind), [])
+
     def facts_for_base(self, base: int) -> list[Fact]:
         return self.by_base.get(base, [])
+
+    def facts_for_base_kind(self, base: int, kind: str) -> list[Fact]:
+        return [f for f in self.by_base.get(base, []) if f.kind == kind]
 
     def verified(self, dist: int) -> bool:
         return bool(self.by_dist.get(dist))

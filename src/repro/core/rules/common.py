@@ -1,0 +1,34 @@
+"""Shared layout helpers used across rule modules."""
+from __future__ import annotations
+
+from typing import Sequence
+
+from ..bijection import Layout, NotSplitMerge
+from ..relations import Fact
+
+# elementwise ops that are linear (distribute over add-partials)
+LINEAR_UNARY = frozenset({"neg"})
+
+
+def move_dim(rank: int, src: int, dst: int) -> tuple[int, ...]:
+    dims = [i for i in range(rank) if i != src]
+    dims.insert(dst, src)
+    return tuple(dims)
+
+
+def shard_stack_layout(shape: Sequence[int], dim: int, c: int) -> Layout:
+    """Layout mapping a global tensor to its rank-stacked shards:
+    ``B(shape) -> (c, *local)`` with dim ``dim`` chunked by ``c``."""
+    shape = tuple(int(s) for s in shape)
+    if shape[dim] % c != 0:
+        raise NotSplitMerge(f"dim {dim} of {shape} not divisible by {c}")
+    lay = Layout.identity(shape)
+    split = shape[:dim] + (c, shape[dim] // c) + shape[dim + 1 :]
+    lay = lay.then_reshape(split)
+    return lay.then_transpose(move_dim(len(split), dim, 0))
+
+
+def dup_id(f: Fact) -> bool:
+    """Dup fact whose layout is identity up to unit-dim bookkeeping."""
+    return (f.layout.effectively_identity
+            and f.layout.src_shape == f.layout.dst_shape)

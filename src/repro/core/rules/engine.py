@@ -1,0 +1,103 @@
+"""Semi-naive worklist evaluation (egg/TTrace-style incremental rules).
+
+The pass-based reference engine rescans every node on every pass —
+O(passes x nodes) handler firings even when a single fact changed.  The
+worklist engine visits each node once and then re-visits a node only when
+one of its *inputs* gained a fact: :meth:`RelStore.add` notifies a listener,
+which enqueues the dist-graph consumers of the changed node (via the
+precomputed consumer index on :class:`~repro.core.ir.Graph`), tagged with
+the fact kinds that changed so rules that never consume those kinds are
+skipped (the ``consumes`` declaration on each registered rule).
+
+Restricted runs (``run(nodes=layer_nodes)``) drive per-layer rewriting in
+:class:`~repro.core.partition.PartitionedVerifier`: facts crossing the
+layer boundary land in ``pending`` and are drained by a later run — the
+final unrestricted ``run()`` visits only never-visited nodes plus the
+pending frontier, never the whole graph again.
+
+``rule_invocations`` mirrors the Propagator's counter; benchmarks compare it
+against the pass-based engine's count on the same graph pair
+(``benchmarks/bench_propagation.py``).
+"""
+from __future__ import annotations
+
+import heapq
+from typing import Iterable, Optional
+
+from ..relations import Fact
+
+
+class WorklistEngine:
+    def __init__(self, prop) -> None:
+        self.prop = prop
+        self._consumers = prop.dist.consumer_index()
+        # nodes to (re)visit outside the active run, kind-tagged
+        self.pending: dict[int, set[str]] = {}
+        self.visited: set[int] = set()
+        self._heap: list[int] = []
+        self._inheap: dict[int, Optional[set[str]]] = {}  # None = fire all rules
+        self._allowed: Optional[set[int]] = None
+        self._active = False
+        prop.store.listeners.append(self._on_fact)
+
+    @property
+    def rule_invocations(self) -> int:
+        return self.prop.rule_invocations
+
+    # ------------------------------------------------------------ listeners
+    def _on_fact(self, fact: Fact) -> None:
+        for c in self._consumers.get(fact.dist, ()):
+            self._mark(c, fact.kind)
+
+    def _mark(self, nid: int, kind: str) -> None:
+        if self._active and (self._allowed is None or nid in self._allowed):
+            cur = self._inheap.get(nid, -1)
+            if cur == -1:
+                heapq.heappush(self._heap, nid)
+                self._inheap[nid] = {kind}
+            elif cur is not None:
+                cur.add(kind)
+        else:
+            self.pending.setdefault(nid, set()).add(kind)
+
+    # ------------------------------------------------------------------ run
+    def run(self, nodes: Optional[Iterable[int]] = None) -> None:
+        """Drain the worklist to fixpoint.
+
+        ``nodes`` restricts processing to that subset (per-layer rewriting);
+        an unrestricted run seeds every not-yet-visited node plus the
+        pending cross-boundary frontier."""
+        dist = self.prop.dist
+        if nodes is None:
+            allowed = None
+            seeds: dict[int, Optional[set[str]]] = {
+                n: None for n in range(len(dist.nodes)) if n not in self.visited
+            }
+        else:
+            allowed = set(nodes)
+            seeds = {n: None for n in allowed}
+        for nid in list(self.pending):
+            if allowed is None or nid in allowed:
+                kinds = self.pending.pop(nid)
+                if seeds.get(nid, -1) == -1:  # not seeded: semi-naive re-visit
+                    seeds[nid] = kinds
+        self._inheap = dict(seeds)
+        self._heap = sorted(seeds)  # min-heap: topological (ids are topo-ordered)
+        self._allowed = allowed
+        self._active = True
+        try:
+            while True:
+                while self._heap:
+                    nid = heapq.heappop(self._heap)
+                    kinds = self._inheap.pop(nid, None)
+                    self.visited.add(nid)
+                    self.prop.dispatch(
+                        dist[nid], None if kinds is None else frozenset(kinds)
+                    )
+                before = self.prop.store.num_derived
+                self.prop.apply_meta_rules()
+                if not self._heap and self.prop.store.num_derived == before:
+                    break
+        finally:
+            self._active = False
+            self._allowed = None

@@ -1,0 +1,180 @@
+"""Slice/concat op family: structural ops over sharded tensors — aligned
+chunks of a sharded dim become slicegrp facts (paper Fig. 8), slices and
+concats along unsharded dims keep the shard relation, and KV-cache style
+dynamic slicing carries clean shards through replicated indices."""
+from __future__ import annotations
+
+import itertools
+
+from ..bijection import Layout, NotSplitMerge
+from ..ir import Node
+from ..relations import DUP, LOOPRED, PARTIAL, SHARD, SLICEGRP, Fact
+from .common import dup_id, shard_stack_layout
+from .congruence import generic
+from .registry import DEFAULT_REGISTRY as R
+
+
+@R.rule("slice", ("slice",), consumes=(DUP, SHARD, PARTIAL))
+def slice_rule(prop, d: Node) -> None:
+    start = d.param("start_indices")
+    limit = d.param("limit_indices")
+    strides = d.param("strides")
+    if strides is not None and any(s != 1 for s in strides):
+        generic(prop, d)
+        return
+    x = d.inputs[0]
+    xshape = prop.dist[x].shape
+    for f in prop.store.facts(x):
+        if f.kind == DUP and dup_id(f):
+            for z in prop._base_candidates("slice", [f.base], d.params, layer=d.layer):
+                if prop._dtype_ok(z, d):
+                    prop.emit(Fact(DUP, z.id, d.id, prop.size, Layout.identity(z.shape)))
+        if f.kind == SHARD:
+            _shard_slice_unsharded_dims(prop, d, f, start, limit, xshape)
+            _slicegrp_from_slice(prop, d, f, start, limit, xshape)
+        if f.kind == PARTIAL and f.reduce_op == "add" and dup_id(f):
+            for z in prop._base_candidates("slice", [f.base], d.params, layer=d.layer):
+                if prop._dtype_ok(z, d):
+                    prop.emit(
+                        Fact(PARTIAL, z.id, d.id, prop.size, Layout.identity(z.shape), reduce_op="add")
+                    )
+
+
+def _shard_slice_unsharded_dims(prop, d: Node, f: Fact, start, limit, xshape) -> None:
+    """d = slice(x') touching only *unsharded* dims of a cleanly sharded
+    tensor: the shard relation carries through to the baseline slice with
+    identical coordinates (the sharded dim taken whole on both sides)."""
+    k = prop._shard_src_dim(f)
+    if k is None or start is None or k >= len(start) or k >= len(xshape):
+        return
+    if not (start[k] == 0 and limit[k] == xshape[k]):
+        return
+    bshape = prop.base[f.base].shape
+    for zid in prop.base.consumers(f.base):
+        z = prop.base[zid]
+        if z.op != "slice" or not prop.base_eg.same(z.inputs[0], f.base):
+            continue
+        zs, zl = z.param("start_indices"), z.param("limit_indices")
+        zstr = z.param("strides")
+        if zstr is not None and any(s != 1 for s in zstr):
+            continue
+        ok = True
+        for i in range(len(bshape)):
+            if i == k:
+                ok &= zs[i] == 0 and zl[i] == bshape[i]
+            else:
+                ok &= zs[i] == start[i] and zl[i] == limit[i]
+        if ok and prop._dtype_ok(z, d):
+            try:
+                lay = shard_stack_layout(z.shape, k, prop.size)
+            except NotSplitMerge:
+                continue
+            prop.emit(Fact(SHARD, z.id, d.id, prop.size, lay))
+
+
+def _slicegrp_from_slice(prop, d: Node, f: Fact, start, limit, xshape) -> None:
+    """d = slice(x') taking an aligned chunk of the *sharded* dim of x'
+    (paper's fine-grained slicing, Fig. 8)."""
+    k = prop._shard_src_dim(f)
+    if k is None or start is None:
+        return
+    # slice must be full on all dims except the local image of k (== k for
+    # clean layouts) and chunk-aligned there
+    sliced_dims = [
+        i for i, (s, l) in enumerate(zip(start, limit)) if not (s == 0 and l == xshape[i])
+    ]
+    if sliced_dims != [k]:
+        return
+    length = limit[k] - start[k]
+    if length <= 0 or xshape[k] % length != 0 or start[k] % length != 0:
+        return
+    n = xshape[k] // length
+    prop.emit(
+        Fact(
+            SLICEGRP,
+            f.base,
+            d.id,
+            prop.size,
+            f.layout,
+            dim=k,
+            nchunk=n,
+            index=start[k] // length,
+        )
+    )
+
+
+@R.rule("concat_shard", ("concat",), consumes=(SHARD,))
+def concat(prop, d: Node) -> None:
+    """concat: dup operands verify via the generic congruence rule; shard
+    operands concat along a non-sharded dim keep the shard relation."""
+    dim = d.param("dimension")
+    fls = [prop.store.facts_kind(i, SHARD) for i in d.inputs]
+    if not all(fls) or dim is None:
+        return
+    for combo in itertools.product(*[fl[:4] for fl in fls]):
+        ks = {prop._shard_src_dim(f) for f in combo}
+        if len(ks) != 1 or None in ks or dim in ks:
+            continue
+        k = next(iter(ks))
+        b_inputs = [f.base for f in combo]
+        for z in prop._base_candidates("concat", b_inputs, d.params, layer=d.layer):
+            if prop._dtype_ok(z, d):
+                try:
+                    lay = shard_stack_layout(z.shape, k, prop.size)
+                except NotSplitMerge:
+                    continue
+                prop.emit(Fact(SHARD, z.id, d.id, prop.size, lay))
+
+
+@R.rule("dynamic_slice_shard", ("dynamic_slice", "dynamic_update_slice"),
+        consumes=(DUP, SHARD, PARTIAL, SLICEGRP, LOOPRED))
+def dynamic_sliceish(prop, d: Node) -> None:
+    """dynamic_slice / dynamic_update_slice (KV-cache reads/writes):
+    dup via congruence (the generic rule); clean shard facts carry through
+    when the sharded dim is untouched by the dynamic indexing (start
+    operands replicated and congruent with the baseline's)."""
+    n_data = 2 if d.op == "dynamic_update_slice" else 1
+    data_in = d.inputs[:n_data]
+    idx_in = d.inputs[n_data:]
+    idx_fact_lists = [
+        [f for f in prop.store.facts_kind(i, DUP) if dup_id(f)][:4]
+        for i in idx_in
+    ]
+    if not all(idx_fact_lists):
+        return
+    data_fact_lists = [prop.store.facts(i) for i in data_in]
+    if not all(data_fact_lists):
+        return
+    for combo_all in itertools.product(*[fl[:6] for fl in data_fact_lists],
+                                       *idx_fact_lists):
+        combo = combo_all[:len(data_in)]
+        idx_facts = combo_all[len(data_in):]
+        if not any(f.kind == SHARD for f in combo):
+            continue
+        negs = set()
+        ok = True
+        for f in combo:
+            if f.kind == SHARD:
+                k = prop._shard_src_dim(f)
+                if k is None:
+                    ok = False
+                    break
+                negs.add(k - len(prop.base[f.base].shape))
+            elif not (f.kind == DUP and dup_id(f)):
+                ok = False
+                break
+        if not ok or len(negs) != 1:
+            continue
+        k_neg = next(iter(negs))
+        b_inputs = [f.base for f in combo] + [f.base for f in idx_facts]
+        for z in prop._base_candidates(d.op, b_inputs, d.params, layer=d.layer):
+            if not prop._dtype_ok(z, d):
+                continue
+            k_out = len(z.shape) + k_neg
+            if k_out < 0 or z.shape[k_out] % prop.size != 0:
+                continue
+            try:
+                lay = shard_stack_layout(z.shape, k_out, prop.size)
+            except NotSplitMerge:
+                continue
+            prop.emit(Fact(SHARD, z.id, d.id, prop.size, lay))

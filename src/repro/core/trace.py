@@ -152,6 +152,54 @@ class Tracer:
         # accounting in the roofline analysis.
         self.scan_inline = scan_inline
         self._mult = 1
+        # node id -> concrete value for int/bool scalar consts, so scalar
+        # index arithmetic folds at trace time (see _try_fold)
+        self._scalar_val: dict[int, Any] = {}
+
+    def _record_scalar(self, nid: int, val) -> int:
+        arr = np.asarray(val)
+        if arr.shape == () and arr.dtype.kind in "ib":
+            self._scalar_val[nid] = arr
+        return nid
+
+    # Scalar integer constant folding: index-clamp chains (dynamic_update_
+    # slice lowers start clamping to select/lt/add against the *dim size*)
+    # otherwise differ structurally between baseline and per-device graphs
+    # (global vs local dim) even though both evaluate to the same constant —
+    # folding canonicalizes both sides so congruence matching relates them.
+    _FOLD_PRIMS = {
+        "add": lambda a, b: a + b,
+        "sub": lambda a, b: a - b,
+        "mul": lambda a, b: a * b,
+        "max": np.maximum,
+        "min": np.minimum,
+        "neg": np.negative,
+        "rem": np.fmod,  # lax.rem is C-style truncated (sign of dividend)
+        "lt": np.less,
+        "le": np.less_equal,
+        "gt": np.greater,
+        "ge": np.greater_equal,
+        "eq": np.equal,
+        "ne": np.not_equal,
+        "clamp": lambda lo, x, hi: np.clip(x, lo, hi),
+        "select_n": lambda which, *cases: cases[int(which)],
+        "convert_element_type": lambda x: x,
+    }
+
+    def _try_fold(self, prim: str, eqn, in_ids: list[int]) -> Optional[int]:
+        fn = self._FOLD_PRIMS.get(prim)
+        if fn is None or len(eqn.outvars) != 1:
+            return None
+        aval = eqn.outvars[0].aval
+        if tuple(aval.shape) != () or np.dtype(aval.dtype).kind not in "ib":
+            return None
+        if any(i not in self._scalar_val for i in in_ids):
+            return None
+        val = np.asarray(fn(*[self._scalar_val[i] for i in in_ids]))
+        val = val.astype(np.dtype(aval.dtype))
+        nid = self.g.add("const", (), (), str(aval.dtype),
+                         {"value_hash": _const_hash(val)})
+        return self._record_scalar(nid, val)
 
     def _emit_eqn(self, eqn, in_ids: list[int]) -> list[int]:
         prim = eqn.primitive.name
@@ -257,13 +305,14 @@ class Tracer:
 
         def read(var) -> int:
             if hasattr(var, "val"):  # Literal
-                return self.g.add(
+                nid = self.g.add(
                     "const",
                     (),
                     tuple(np.shape(var.val)),
                     str(np.asarray(var.val).dtype),
                     {"value_hash": _const_hash(var.val)},
                 )
+                return self._record_scalar(nid, var.val)
             return env[var]
 
         for cv, cval in zip(jaxpr.constvars, consts):
@@ -275,6 +324,8 @@ class Tracer:
                 str(aval.dtype),
                 {"value_hash": _const_hash(cval) if cval is not None else None},
             )
+            if cval is not None:
+                self._record_scalar(env[cv], cval)
         for iv, nid in zip(jaxpr.invars, in_ids):
             env[iv] = nid
 
@@ -360,6 +411,10 @@ class Tracer:
                         scope=scope,
                     )
                 continue
+            folded = self._try_fold(prim, eqn, ins)
+            if folded is not None:
+                env[eqn.outvars[0]] = folded
+                continue
             out_ids = self._emit_eqn(eqn, ins)
             for ov, oid in zip(eqn.outvars, out_ids):
                 env[ov] = oid
@@ -410,6 +465,8 @@ def trace_sharded(
     """Trace the **per-device** program of ``shard_map(fn)`` (collectives
     explicit).  ``avals`` are *global* shapes; input nodes carry per-shard
     shapes as seen by the device program."""
-    sm = jax.shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
-                       check_vma=check_vma)
+    from repro.compat import shard_map
+
+    sm = shard_map(fn, mesh=mesh, in_specs=in_specs, out_specs=out_specs,
+                   check_vma=check_vma)
     return trace(sm, *avals, layer_tag_fn=layer_tag_fn, name=name)

@@ -13,11 +13,13 @@ from typing import Optional, Sequence
 
 from jax.sharding import AbstractMesh, PartitionSpec
 
+from repro.compat import abstract_mesh
+
 from .egraph import GraphEGraph
 from .ir import Graph, LEAF_OPS
 from .partition import MemoStats, PartitionedVerifier
 from .relations import DUP, SHARD, Diagnostic, RelStore
-from .rules import Propagator
+from .rules import Propagator, WorklistEngine
 from .trace import trace, trace_sharded
 
 
@@ -60,6 +62,7 @@ class Report:
     elapsed_s: float
     memo: Optional[MemoStats] = None
     unverified_count: int = 0
+    rule_invocations: int = 0
 
     def summary(self) -> str:
         lines = [
@@ -83,9 +86,14 @@ class Report:
 class VerifyOptions:
     partition: bool = True
     memoize: bool = True
+    # pass-engine knobs: the worklist engine is single-threaded and runs to
+    # true fixpoint, so these two only apply with engine="passes"
     parallel_workers: int = 0
     max_passes: int = 30
     axis: str = "model"
+    # "worklist": semi-naive incremental evaluation (default);
+    # "passes": the pass-based rescan loop (parity reference)
+    engine: str = "worklist"
 
 
 def _output_ok(store: RelStore, b_out: int, d_out: int, spec: OutputSpec, size: int) -> bool:
@@ -166,10 +174,14 @@ def verify_graphs(
     base_inputs: Sequence[int],
     dist_inputs: Sequence[int],
     output_specs: Optional[Sequence[OutputSpec]] = None,
-    options: VerifyOptions = VerifyOptions(),
+    options: Optional[VerifyOptions] = None,
 ) -> Report:
     t0 = time.perf_counter()
+    options = options or VerifyOptions()
+    if options.engine not in ("worklist", "passes"):
+        raise ValueError(f"unknown engine {options.engine!r}: worklist|passes")
     prop = Propagator(base, dist, size, axis=options.axis)
+    engine = WorklistEngine(prop) if options.engine == "worklist" else None
     for f in input_facts:
         b, d = base_inputs[f.base_index], dist_inputs[f.dist_index]
         if f.kind == DUP:
@@ -180,9 +192,17 @@ def verify_graphs(
             raise ValueError(f.kind)
     memo = None
     if options.partition:
-        pv = PartitionedVerifier(prop, options.parallel_workers, options.memoize)
+        pv = PartitionedVerifier(prop, options.parallel_workers, options.memoize,
+                                 engine=engine)
         memo = pv.run()
-        prop.run(max_passes=2)  # cross-layer cleanup passes
+        if engine is not None:
+            # cross-layer cleanup: never-visited nodes (memoized layers) plus
+            # the pending consumers of facts that crossed layer boundaries
+            engine.run()
+        else:
+            prop.run(max_passes=2)  # cross-layer cleanup passes
+    elif engine is not None:
+        engine.run()
     else:
         prop.run(max_passes=options.max_passes)
 
@@ -207,6 +227,7 @@ def verify_graphs(
         elapsed_s=time.perf_counter() - t0,
         memo=memo,
         unverified_count=unverified,
+        rule_invocations=prop.rule_invocations,
     )
 
 
@@ -229,7 +250,7 @@ def verify_sharded(
     shards dim d along ``axis`` registers ``sharded(b_i, d_i, dim=d)``;
     a replicated spec registers ``duplicate``.
     """
-    mesh = mesh or AbstractMesh((size,), (axis,))
+    mesh = mesh or abstract_mesh((size,), (axis,))
     options = options or VerifyOptions(axis=axis)
     gb, b_in, _b_out = trace(base_fn, *avals, name="base")
     gd, d_in, _d_out = trace_sharded(
@@ -238,9 +259,6 @@ def verify_sharded(
     facts = []
     import jax
 
-    flat_specs = []
-    for s in in_specs:
-        flat_specs.append(s)
     # flatten specs to leaves aligned with flattened avals
     leaves = jax.tree_util.tree_leaves(
         tuple(in_specs), is_leaf=lambda x: isinstance(x, PartitionSpec)

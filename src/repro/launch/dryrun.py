@@ -30,6 +30,7 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
+from repro.compat import shard_map
 from repro.configs import SHAPES, get_config, input_specs, skip_reason
 from repro.configs.base import ARCH_IDS
 from repro.launch import analysis
@@ -186,7 +187,7 @@ def build_cell(arch: str, shape: str, mesh, *, zero1=False, sp=False, micro=0,
         zero_axis = ("model" if pure_dp else "data") if zero1 else None
         ospecs = _opt_specs(pspecs, zero1=zero1, dp_last=zero_axis, flags=flags)
         mspecs = {"loss": P(), "grad_norm": P(), "lr": P()}
-        fn = jax.shard_map(step, mesh=mesh, in_specs=(pspecs, ospecs, bspecs),
+        fn = shard_map(step, mesh=mesh, in_specs=(pspecs, ospecs, bspecs),
                            out_specs=(pspecs, ospecs, mspecs), check_vma=False)
         avals = (param_shapes, opt_shapes, batch)
         out_sharded_size = None
@@ -195,7 +196,7 @@ def build_cell(arch: str, shape: str, mesh, *, zero1=False, sp=False, micro=0,
             return model.forward(params, b)
 
         lspec = P(dp_entry, None, "model")
-        fn = jax.shard_map(step, mesh=mesh, in_specs=(pspecs, bspecs),
+        fn = shard_map(step, mesh=mesh, in_specs=(pspecs, bspecs),
                            out_specs=lspec, check_vma=False)
         avals = (param_shapes, batch)
     else:  # decode
@@ -214,7 +215,7 @@ def build_cell(arch: str, shape: str, mesh, *, zero1=False, sp=False, micro=0,
         def step(params, tok, caches, pos):
             return model.decode_step(params, tok, caches, pos)
 
-        fn = jax.shard_map(
+        fn = shard_map(
             step, mesh=mesh,
             in_specs=(pspecs, P(dp_entry), cspecs, P()),
             out_specs=(P(dp_entry, "model"), cspecs), check_vma=False)

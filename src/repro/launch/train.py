@@ -105,7 +105,8 @@ def main(argv=None) -> int:
     sample = data.batch_at(0)
     bspecs = batch_spec(sample, ("data",))
     mspecs = {"loss": P(), "grad_norm": P(), "lr": P()}
-    step_fn = jax.jit(jax.shard_map(
+    from repro.compat import shard_map
+    step_fn = jax.jit(shard_map(
         make_step_fn(model, tcfg), mesh=mesh,
         in_specs=(pspecs, ospecs, bspecs), out_specs=(pspecs, ospecs, mspecs),
         check_vma=False))

@@ -29,9 +29,37 @@ import jax
 import jax.numpy as jnp
 import msgpack
 import numpy as np
-import zstandard
+
+try:
+    import zstandard
+except ImportError:  # optional dep: fall back to the stdlib zlib codec
+    zstandard = None
+import zlib
 
 _CHUNK = 64 * 1024 * 1024  # shard file target size
+
+
+class _ZlibCompressor:
+    def compress(self, data: bytes) -> bytes:
+        return zlib.compress(data, 6)
+
+
+class _ZlibDecompressor:
+    def decompress(self, data: bytes) -> bytes:
+        return zlib.decompress(data)
+
+
+def _compressor():
+    return zstandard.ZstdCompressor(level=3) if zstandard else _ZlibCompressor()
+
+
+def _decompressor(codec: str):
+    if codec == "zstd":
+        if zstandard is None:
+            raise ImportError(
+                "checkpoint was written with zstd but zstandard is not installed")
+        return zstandard.ZstdDecompressor()
+    return _ZlibDecompressor()
 
 
 def _tree_paths(tree) -> list[tuple[str, Any]]:
@@ -62,9 +90,10 @@ def save(ckpt_dir: str | os.PathLike, step: int, tree, *, keep_last: int = 3,
             {"key": k, "shape": list(np.shape(v)), "dtype": str(jnp.asarray(v).dtype)}
             for k, v in leaves
         ],
+        "codec": "zstd" if zstandard else "zlib",
         **(extra_meta or {}),
     }
-    cctx = zstandard.ZstdCompressor(level=3)
+    cctx = _compressor()
     shard_idx, buf, sizes = 0, [], 0
 
     def flush():
@@ -124,7 +153,7 @@ def restore(path: str | os.PathLike, target_tree, *, shardings=None) -> tuple[An
     path = Path(path)
     with open(path / "meta.json") as f:
         meta = json.load(f)
-    dctx = zstandard.ZstdDecompressor()
+    dctx = _decompressor(meta.get("codec", "zstd"))
     loaded: dict[str, np.ndarray] = {}
     for shard in sorted(path.glob("shard_*.bin")):
         with open(shard, "rb") as f:

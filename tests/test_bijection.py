@@ -5,6 +5,9 @@ transpose sequence must APPLY identically to numpy's reshape/transpose;
 composition, inversion and equivalence must agree with concrete arrays.
 """
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need it; plain tests run without
 from hypothesis import given, settings, strategies as st
 
 from repro.core.bijection import Layout, NotSplitMerge, infer_bijection, layout_of_ops

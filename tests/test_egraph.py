@@ -1,6 +1,9 @@
 """E-graph invariants: union-find, hashcons/congruence closure, and the
 structural rewrite saturation (hypothesis property tests)."""
 import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need it; plain tests run without
 from hypothesis import given, settings, strategies as st
 
 from repro.core.egraph import EGraph, ENode, GraphEGraph

@@ -37,7 +37,8 @@ def test_pipeline_matches_sequential():
         for s in range(N_STAGES):
             ref = jax.vmap(lambda xx: stage_fn(Ws[s], xx))(ref)
 
-        fn = jax.shard_map(
+        from repro.compat import shard_map
+        fn = shard_map(
             lambda w, xx: pipeline_forward(lambda p, h: stage_fn(p[0], h), w, xx,
                                            n_stages=N_STAGES),
             mesh=mesh, in_specs=(P("pod"), P()), out_specs=P(), check_vma=False)
@@ -78,7 +79,8 @@ def test_pipeline_grad_matches_sequential():
             return jnp.sum(out * out) / N_STAGES
 
         gref = jax.grad(seq_loss)(Ws)
-        fn = jax.shard_map(jax.grad(pipe_loss), mesh=mesh,
+        from repro.compat import shard_map
+        fn = shard_map(jax.grad(pipe_loss), mesh=mesh,
                            in_specs=(P("pod"), P()), out_specs=P("pod"),
                            check_vma=False)
         with mesh:

@@ -8,6 +8,7 @@ would be an unsound rule; none may exist (paper §5.1 soundness argument).
 """
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need it; plain tests run without
 from hypothesis import given, settings, strategies as st
 
 from repro.core.ir import Graph
