@@ -1,7 +1,8 @@
 """Paper Fig. 12: verification time by scaling technique on llama3_8b TP-16:
 no partitioning vs partitioned(sequential) vs partitioned+parallel rewriting
-vs partitioned+memoization (the paper also reports that NO-partitioning fails
-on the full model; we cap it at a layer budget and report the trend)."""
+vs partitioned+memoization vs the full scaling pipeline (memoization + layer
+stamping + worklist sharding).  The paper also reports that NO-partitioning
+fails on the full model; we cap it at a layer budget and report the trend."""
 from __future__ import annotations
 
 import time
@@ -22,11 +23,17 @@ def _run(opts: VerifyOptions) -> float:
 
 def run() -> list[dict]:
     variants = [
-        ("fig12_no_partition", VerifyOptions(partition=False)),
-        ("fig12_partition_seq", VerifyOptions(partition=True, memoize=False)),
+        ("fig12_no_partition", VerifyOptions(partition=False, stamp=False)),
+        ("fig12_partition_seq", VerifyOptions(partition=True, memoize=False,
+                                              stamp=False)),
         ("fig12_partition_par4", VerifyOptions(partition=True, memoize=False,
-                                               parallel_workers=4)),
-        ("fig12_partition_memo", VerifyOptions(partition=True, memoize=True)),
+                                               parallel_workers=4, stamp=False)),
+        ("fig12_partition_memo", VerifyOptions(partition=True, memoize=True,
+                                               stamp=False)),
+        ("fig12_memo_stamp", VerifyOptions(partition=True, memoize=True,
+                                           stamp=True)),
+        ("fig12_memo_stamp_par4", VerifyOptions(partition=True, memoize=True,
+                                                stamp=True, parallel_workers=4)),
     ]
     out = []
     for name, opts in variants:

@@ -1,24 +1,29 @@
 """Paper Fig. 11 (groups a-e): verification-time scaling in seqlen, batch,
 layers, TP degree, and head count — on the llama3_8b family like the paper.
 
-Expected (paper §7.2): constant in seqlen/batch/heads/TP, linear in layers.
+Expected (paper §7.2): constant in seqlen/batch/heads/TP; the layers curve
+(group c) was linear at the seed and bends toward flat with layer stamping +
+memo settling (``*_nostamp`` rows keep the linear reference for comparison —
+CI guards the 32/4-layer ratio against depth-scaling regressions).
 """
 from __future__ import annotations
 
-import dataclasses
 import time
 
-from repro.configs import get_config
 from repro.core.modelverify import verify_model_tp
+from repro.core.verifier import VerifyOptions
 
 
-def _time(arch="llama3_8b", *, tp=16, layers=4, seq=64, batch=4, heads=None) -> float:
-    kw = {}
-    t0 = time.perf_counter()
-    rep = verify_model_tp(arch, tp=tp, smoke=False, n_layers=layers, seq=seq,
-                          batch=batch)
-    assert rep.verified
-    return time.perf_counter() - t0
+def _time(arch="llama3_8b", *, tp=16, layers=4, seq=64, batch=4, stamp=True,
+          reps=1) -> float:
+    best = float("inf")
+    for _ in range(reps):
+        t0 = time.perf_counter()
+        rep = verify_model_tp(arch, tp=tp, smoke=False, n_layers=layers, seq=seq,
+                              batch=batch, options=VerifyOptions(stamp=stamp))
+        assert rep.verified
+        best = min(best, time.perf_counter() - t0)
+    return best
 
 
 def run() -> list[dict]:
@@ -31,10 +36,16 @@ def run() -> list[dict]:
     for b in (1, 4, 16, 64):
         out.append({"name": f"fig11b_batch_{b}", "us_per_call": _time(batch=b) * 1e6,
                     "derived": "expect~constant"})
-    # (c) layers
+    # (c) layers: stamped (default pipeline) vs full-trace reference.
+    # best-of-2 — the CI ratio guard reads these rows, so damp timer noise
     for l in (4, 8, 16, 32):
-        out.append({"name": f"fig11c_layers_{l}", "us_per_call": _time(layers=l) * 1e6,
-                    "derived": "expect~linear"})
+        out.append({"name": f"fig11c_layers_{l}",
+                    "us_per_call": _time(layers=l, reps=2) * 1e6,
+                    "derived": "expect~flat(stamped)"})
+    for l in (4, 32):
+        out.append({"name": f"fig11c_layers_{l}_nostamp",
+                    "us_per_call": _time(layers=l, stamp=False, reps=2) * 1e6,
+                    "derived": "expect~linear(reference)"})
     # (d) tp degree
     for tp in (4, 8, 16):
         out.append({"name": f"fig11d_tp_{tp}", "us_per_call": _time(tp=tp) * 1e6,

@@ -1,7 +1,10 @@
 """Benchmark harness (deliverable d): one module per paper table/figure.
-Prints ``name,us_per_call,derived`` CSV."""
+Prints ``name,us_per_call,derived`` CSV and writes ``BENCH_results.json``
+(machine-readable ``name -> us_per_call``) so the perf trajectory is
+recorded across PRs (CI uploads it as an artifact)."""
 from __future__ import annotations
 
+import json
 import sys
 import traceback
 from pathlib import Path
@@ -12,6 +15,8 @@ _ROOT = Path(__file__).resolve().parent.parent
 for p in (str(_ROOT), str(_ROOT / "src")):
     if p not in sys.path:
         sys.path.insert(0, p)
+
+RESULTS_PATH = _ROOT / "BENCH_results.json"
 
 
 def main() -> None:
@@ -33,16 +38,20 @@ def main() -> None:
         ("roofline(Roofline)", bench_roofline),
     ]
     print("name,us_per_call,derived")
+    results: dict[str, float] = {}
     failed = False
     for label, mod in suites:
         try:
             for row in mod.run():
                 derived = str(row.get("derived", "")).replace(",", ";")
                 print(f"{row['name']},{row['us_per_call']:.1f},{derived}")
+                results[row["name"]] = round(float(row["us_per_call"]), 1)
         except Exception as e:  # report and continue
             failed = True
             print(f"{label}_FAILED,0,{type(e).__name__}: {e}")
             traceback.print_exc(file=sys.stderr)
+    RESULTS_PATH.write_text(json.dumps(results, indent=2, sort_keys=True) + "\n")
+    print(f"# wrote {RESULTS_PATH.name} ({len(results)} entries)", file=sys.stderr)
     sys.exit(1 if failed else 0)
 
 

@@ -37,6 +37,10 @@ def _prod(xs: Sequence[int]) -> int:
     return out
 
 
+# interned identity layouts (one per shape — the most-constructed layout)
+_IDENTITY_CACHE: dict[tuple[int, ...], "Layout"] = {}
+
+
 @dataclass(frozen=True)
 class Layout:
     """A bijective layout transform ``src_shape -> dst_shape``.
@@ -53,13 +57,30 @@ class Layout:
     dst_groups: tuple[int, ...]
 
     # -- derived -------------------------------------------------------------
+    # src_shape/dst_shape/hash are recomputed millions of times on the rule
+    # hot path; Layout is frozen, so cache them on first use.
     @property
     def src_shape(self) -> tuple[int, ...]:
-        return self._group_shape(self.atoms, self.src_groups, range(len(self.atoms)))
+        v = self.__dict__.get("_src_shape")
+        if v is None:
+            v = self._group_shape(self.atoms, self.src_groups, range(len(self.atoms)))
+            object.__setattr__(self, "_src_shape", v)
+        return v
 
     @property
     def dst_shape(self) -> tuple[int, ...]:
-        return self._group_shape(self.atoms, self.dst_groups, self.perm)
+        v = self.__dict__.get("_dst_shape")
+        if v is None:
+            v = self._group_shape(self.atoms, self.dst_groups, self.perm)
+            object.__setattr__(self, "_dst_shape", v)
+        return v
+
+    def __hash__(self) -> int:
+        h = self.__dict__.get("_hash")
+        if h is None:
+            h = hash((self.atoms, self.src_groups, self.perm, self.dst_groups))
+            object.__setattr__(self, "_hash", h)
+        return h
 
     @staticmethod
     def _group_shape(atoms, groups, order) -> tuple[int, ...]:
@@ -90,8 +111,12 @@ class Layout:
     @staticmethod
     def identity(shape: Sequence[int]) -> "Layout":
         shape = tuple(int(s) for s in shape)
-        n = len(shape)
-        return Layout(shape, (1,) * n, tuple(range(n)), (1,) * n)
+        lay = _IDENTITY_CACHE.get(shape)
+        if lay is None:
+            n = len(shape)
+            lay = Layout(shape, (1,) * n, tuple(range(n)), (1,) * n)
+            _IDENTITY_CACHE[shape] = lay
+        return lay
 
     # -- refinement machinery ----------------------------------------------------
     def _split_atom(self, idx: int, outer: int) -> "Layout":
@@ -264,6 +289,8 @@ class Layout:
 
         Unit atoms carry no data: both the atom list and the permutation are
         compared on non-unit atoms only (renumbered in source order)."""
+        if self is other or self == other:
+            return True
         if self.src_shape != other.src_shape or self.dst_shape != other.dst_shape:
             return False
         try:

@@ -107,6 +107,9 @@ class Graph:
         self.nodes: list[Node] = []
         self.outputs: list[int] = []
         self._consumers: Optional[dict[int, list[int]]] = None
+        # periodicity metadata when this graph was produced by layer stamping
+        # (see repro.core.stamp); None for ordinary traces
+        self.stamp = None
 
     # -- construction ------------------------------------------------------
     def add(

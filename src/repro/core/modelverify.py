@@ -6,6 +6,11 @@ TP/EP-sharded per-device forward of the SAME model definition and runs the
 Scalify engine over the pair:
 
   * layers are unrolled under named scopes -> per-layer memoization fires;
+  * deep models are **layer-stamped** (``repro.core.stamp``): only
+    ``TRACE_PERIODS`` block periods are traced and the remaining layers are
+    cloned directly in the IR, so trace cost is O(block_period) instead of
+    O(n_layers).  ``VerifyOptions(stamp=False)`` disables this; any
+    non-periodic trace falls back to full tracing automatically;
   * inner scans (attention KV chunks, SSD chunk recurrence) are unrolled so
     the IR is plain dataflow (the paper's setting);
   * the vocab-parallel embedding verifies through the trusted-template meta
@@ -32,6 +37,8 @@ from repro.parallel.ctx import ParallelCtx
 from repro.parallel.sharding import param_specs
 
 from .relations import DUP, SHARD
+from .stamp import TRACE_PERIODS, stamp_graph
+from .trace import LAYER_TAG_STRIDE, trace, trace_sharded
 from .verifier import (
     InputFact,
     OutputSpec,
@@ -39,7 +46,6 @@ from .verifier import (
     VerifyOptions,
     verify_graphs,
 )
-from .trace import trace, trace_sharded
 
 
 def _verify_pspecs(param_shapes, cfg):
@@ -59,25 +65,36 @@ def _verify_pspecs(param_shapes, cfg):
         lambda pth, sp, lf: fix(pth, sp, lf), specs, param_shapes)
 
 
-def verify_model_tp(
-    arch: str,
-    tp: int = 16,
-    *,
-    smoke: bool = False,
-    batch: int = 1,
-    seq: int = 32,
-    n_layers: Optional[int] = None,
-    options: Optional[VerifyOptions] = None,
-    mutate_dist=None,
-) -> Report:
-    cfg = get_config(arch, smoke=smoke)
-    if n_layers is not None:
-        # round up to a whole block period (hybrids repeat every P layers)
-        per = cfg.block_period
-        n_layers = max(per, (n_layers + per - 1) // per * per)
-        cfg = dataclasses.replace(cfg, n_layers=n_layers)
-    # keep verification traces lean: tiny attention chunks are irrelevant to
-    # graph structure at small seq
+def _round_layers(cfg, n_layers: Optional[int]):
+    if n_layers is None:
+        return cfg
+    # round up to a whole block period (hybrids repeat every P layers)
+    per = cfg.block_period
+    n_layers = max(per, (n_layers + per - 1) // per * per)
+    return dataclasses.replace(cfg, n_layers=n_layers)
+
+
+def _shard_dim(spec, axis: str = "model") -> Optional[int]:
+    dim = None
+    for d, entry in enumerate(tuple(spec)):
+        names = entry if isinstance(entry, tuple) else (entry,)
+        if axis in [n for n in names if n]:
+            dim = d
+    return dim
+
+
+def _spec_input_facts(flat_specs) -> list[InputFact]:
+    facts = []
+    for i, spec in enumerate(flat_specs):
+        dim = _shard_dim(spec)
+        facts.append(
+            InputFact(SHARD if dim is not None else DUP, i, i,
+                      -1 if dim is None else dim))
+    return facts
+
+
+def _forward_pair(arch: str, cfg, tp: int, batch: int, seq: int):
+    """Trace the (baseline, per-device) forward pair for ``cfg``."""
     mesh = abstract_mesh((tp,), ("model",))
     ctx = ParallelCtx(tp_axis="model", tp_size=tp, ep_axis="model", ep_size=tp)
     model_s = Model(cfg, ParallelCtx.single(), moe_impl="dense")
@@ -105,27 +122,94 @@ def verify_model_tp(
     gd, d_in, _ = trace_sharded(
         dist_fn, mesh, (pspecs, bspecs), P(None, None, "model"),
         param_shapes, b, name=f"{arch}-dist")
-    if mutate_dist is not None:
-        gd = mutate_dist(gd)
-
-    # input relation registration straight from the sharding rules
     flat_specs = jax.tree_util.tree_leaves(
         (pspecs, bspecs), is_leaf=lambda x: isinstance(x, P))
-    facts = []
-    for i, spec in enumerate(flat_specs):
-        dim = None
-        for d_, entry in enumerate(tuple(spec)):
-            names = entry if isinstance(entry, tuple) else (entry,)
-            if "model" in [n for n in names if n]:
-                dim = d_
-        facts.append(
-            InputFact(SHARD if dim is not None else DUP, i, i, -1 if dim is None else dim)
-        )
+    return gb, b_in, gd, d_in, flat_specs
+
+
+def _stamped_pair(cfg, pair_fn, periods_per_block: int):
+    """Trace only TRACE_PERIODS block periods and stamp the rest, or None.
+
+    ``periods_per_block``: layer tags per period region (block_period for
+    forward traces whose periods span P layer scopes; 1 for decode traces
+    whose period is one outer block scope).
+    """
+    total = cfg.n_layers // cfg.block_period
+    if total <= TRACE_PERIODS:
+        return None
+    cfg_t = dataclasses.replace(
+        cfg, n_layers=TRACE_PERIODS * cfg.block_period)
+    gb, b_in, gd, d_in, flat_specs = pair_fn(cfg_t)
+    stride = LAYER_TAG_STRIDE * periods_per_block
+    sb = stamp_graph(gb, total, lambda t: t // stride)
+    if sb is None:
+        return None
+    sd = stamp_graph(gd, total, lambda t: t // stride)
+    if sd is None:
+        return None
+    return sb, b_in, sd, d_in, flat_specs
+
+
+def verify_model_tp(
+    arch: str,
+    tp: int = 16,
+    *,
+    smoke: bool = False,
+    batch: int = 1,
+    seq: int = 32,
+    n_layers: Optional[int] = None,
+    options: Optional[VerifyOptions] = None,
+    mutate_dist=None,
+) -> Report:
+    options = options or VerifyOptions()
+    cfg = _round_layers(get_config(arch, smoke=smoke), n_layers)
+
+    pair_fn = lambda c: _forward_pair(arch, c, tp, batch, seq)
+    pair = _stamped_pair(cfg, pair_fn, cfg.block_period) if options.stamp else None
+    if pair is None:
+        pair = pair_fn(cfg)
+    gb, b_in, gd, d_in, flat_specs = pair
+    if mutate_dist is not None:
+        gd = mutate_dist(gd)
+        gd.stamp = None  # surgery invalidates periodicity metadata
+
+    # input relation registration straight from the sharding rules
+    facts = _spec_input_facts(flat_specs)
     return verify_graphs(
         gb, gd, size=tp, input_facts=facts, base_inputs=b_in, dist_inputs=d_in,
         output_specs=[OutputSpec(kind="shard", dim=2)],
-        options=options or VerifyOptions(),
+        options=options,
     )
+
+
+def _decode_pair(arch: str, cfg, tp: int, batch: int, max_len: int):
+    """Trace the (baseline, per-device) decode-step pair for ``cfg``."""
+    from repro.parallel.sharding import cache_specs as _cache_specs
+
+    mesh = abstract_mesh((tp,), ("model",))
+    ctx = ParallelCtx(tp_axis="model", tp_size=tp, ep_axis="model", ep_size=tp)
+    model_s = Model(cfg, ParallelCtx.single(), moe_impl="dense")
+    model_d = Model(cfg, ctx, moe_impl="dense")
+
+    key = jax.random.PRNGKey(0)
+    param_shapes = jax.eval_shape(model_s.init, key)
+    pspecs = _verify_pspecs(param_shapes, cfg)
+    cache_shapes = jax.eval_shape(lambda: model_s.init_cache(batch, max_len))
+    cspecs = _cache_specs(cache_shapes, None)
+    tok = jax.ShapeDtypeStruct((batch,), jnp.int32)
+    pos = jax.ShapeDtypeStruct((), jnp.int32)
+
+    base_fn = lambda p, t, c, q: model_s.decode_step(p, t, c, q, unroll=True)
+    dist_fn = lambda p, t, c, q: model_d.decode_step(p, t, c, q, unroll=True)
+    gb, b_in, _ = trace(base_fn, param_shapes, tok, cache_shapes, pos,
+                        name=f"{arch}-decode-base")
+    gd, d_in, _ = trace_sharded(
+        dist_fn, mesh, (pspecs, P(), cspecs, P()),
+        (P(None, "model"), jax.tree_util.tree_map(lambda s: s, cspecs)),
+        param_shapes, tok, cache_shapes, pos, name=f"{arch}-decode-dist")
+    flat_specs = jax.tree_util.tree_leaves(
+        (pspecs, P(), cspecs, P()), is_leaf=lambda x: isinstance(x, P))
+    return gb, b_in, gd, d_in, (flat_specs, cspecs)
 
 
 def verify_decode_tp(
@@ -142,66 +226,31 @@ def verify_decode_tp(
     """Verify the TP parallelization of the *serving* step (the paper's own
     setting is inference graphs): one token against KV/SSM caches sharded
     over heads, vocab-parallel head output."""
-    import jax.numpy as jnp
-
-    cfg = get_config(arch, smoke=smoke)
-    if n_layers is not None:
-        per = cfg.block_period
-        n_layers = max(per, (n_layers + per - 1) // per * per)
-        cfg = dataclasses.replace(cfg, n_layers=n_layers)
+    options = options or VerifyOptions()
+    cfg = _round_layers(get_config(arch, smoke=smoke), n_layers)
     if cfg.encoder_only:
         raise ValueError(f"{arch} is encoder-only: no decode step")
-    mesh = abstract_mesh((tp,), ("model",))
-    ctx = ParallelCtx(tp_axis="model", tp_size=tp, ep_axis="model", ep_size=tp)
-    model_s = Model(cfg, ParallelCtx.single(), moe_impl="dense")
-    model_d = Model(cfg, ctx, moe_impl="dense")
 
-    key = jax.random.PRNGKey(0)
-    param_shapes = jax.eval_shape(model_s.init, key)
-    pspecs = _verify_pspecs(param_shapes, cfg)
-    cache_shapes = jax.eval_shape(lambda: model_s.init_cache(batch, max_len))
-    from repro.parallel.sharding import cache_specs as _cache_specs
-
-    cspecs = _cache_specs(cache_shapes, None)
-    tok = jax.ShapeDtypeStruct((batch,), jnp.int32)
-    pos = jax.ShapeDtypeStruct((), jnp.int32)
-
-    base_fn = lambda p, t, c, q: model_s.decode_step(p, t, c, q, unroll=True)
-    dist_fn = lambda p, t, c, q: model_d.decode_step(p, t, c, q, unroll=True)
-    gb, b_in, _ = trace(base_fn, param_shapes, tok, cache_shapes, pos,
-                        name=f"{arch}-decode-base")
-    gd, d_in, _ = trace_sharded(
-        dist_fn, mesh, (pspecs, P(), cspecs, P()),
-        (P(None, "model"), jax.tree_util.tree_map(lambda s: s, cspecs)),
-        param_shapes, tok, cache_shapes, pos, name=f"{arch}-decode-dist")
+    # one decode period = one outer block scope (P sub-layers)
+    pair_fn = lambda c: _decode_pair(arch, c, tp, batch, max_len)
+    pair = _stamped_pair(cfg, pair_fn, 1) if options.stamp else None
+    if pair is None:
+        pair = pair_fn(cfg)
+    gb, b_in, gd, d_in, (flat_specs, cspecs) = pair
     if mutate_dist is not None:
         gd = mutate_dist(gd)
+        gd.stamp = None
 
-    flat_specs = jax.tree_util.tree_leaves(
-        (pspecs, P(), cspecs, P()), is_leaf=lambda x: isinstance(x, P))
-    facts = []
-    for i, spec in enumerate(flat_specs):
-        dim = None
-        for d_, entry in enumerate(tuple(spec)):
-            names = entry if isinstance(entry, tuple) else (entry,)
-            if "model" in [n for n in names if n]:
-                dim = d_
-        facts.append(
-            InputFact(SHARD if dim is not None else DUP, i, i,
-                      -1 if dim is None else dim))
+    facts = _spec_input_facts(flat_specs)
 
     # outputs: logits sharded over vocab (dim 1) + every cache leaf sharded
     # on its head dim (matching the input cache specs)
     out_specs = [OutputSpec(kind="shard", dim=1)]
     for spec in jax.tree_util.tree_leaves(cspecs, is_leaf=lambda x: isinstance(x, P)):
-        dim = None
-        for d_, entry in enumerate(tuple(spec)):
-            names = entry if isinstance(entry, tuple) else (entry,)
-            if "model" in [n for n in names if n]:
-                dim = d_
+        dim = _shard_dim(spec)
         out_specs.append(OutputSpec(kind="shard" if dim is not None else "dup",
                                     dim=-1 if dim is None else dim))
     return verify_graphs(
         gb, gd, size=tp, input_facts=facts, base_inputs=b_in, dist_inputs=d_in,
-        output_specs=out_specs, options=options or VerifyOptions(),
+        output_specs=out_specs, options=options,
     )

@@ -9,15 +9,22 @@ Fig. 5).  Structurally identical layer pairs with identical input-relation
 signatures are **memoized**: their facts are replayed onto the new layer's
 nodes without re-running rule matching — the dominant cost saving for deep
 models (paper Fig. 12).
+
+On **stamped** graphs (``repro.core.stamp``) the per-layer bookkeeping is
+O(layer boundary) instead of O(layer): stamped periods are literal clones of
+the template period, so their structural fingerprints, slice-offset deltas
+and external-input lists are served from a per-template cache instead of
+being recomputed, and a memo hit *settles* the layer in the worklist engine
+— replayed facts mark only boundary consumers and the final cleanup run
+never re-dispatches the layer's nodes.
 """
 from __future__ import annotations
 
 import concurrent.futures as _fut
-from dataclasses import dataclass, replace
+from dataclasses import dataclass
 from typing import Optional, Sequence
 
 from .ir import Graph
-from .relations import Fact, RelStore
 from .rules import Propagator
 
 
@@ -28,30 +35,37 @@ class LayerPlan:
     dist_nodes: list[int]
 
 
+def split_layer_buckets(g: Graph) -> dict:
+    """Bucket node ids by layer tag, in topological (id) order: ``"pre"`` =
+    untagged before the first tagged node, int tags, ``"post"`` = untagged
+    after the last.  Untagged *interior* nodes attach to the tag last seen
+    in node-id order (the topologically previous layer — NOT the
+    numerically largest tag, which differs when tags interleave)."""
+    tagged = [n.id for n in g if n.layer is not None]
+    first = tagged[0] if tagged else len(g.nodes)
+    last = tagged[-1] if tagged else -1
+    buckets: dict = {"pre": [], "post": []}
+    last_tag: Optional[int] = None
+    for n in g:
+        if n.layer is not None:
+            last_tag = n.layer
+            buckets.setdefault(n.layer, []).append(n.id)
+        elif n.id < first:
+            buckets["pre"].append(n.id)
+        elif n.id > last:
+            buckets["post"].append(n.id)
+        else:
+            # untagged interior node: attach to the previous tagged layer
+            buckets.setdefault(last_tag if last_tag is not None else "pre",
+                               []).append(n.id)
+    return buckets
+
+
 def partition_layers(base: Graph, dist: Graph) -> list[LayerPlan]:
     """Partition both graphs along layer boundaries, preserving topological
     order: preamble (untagged before the first tagged node), layers by tag,
     postamble (untagged after)."""
-
-    def split(g: Graph) -> dict:
-        tagged = [n.id for n in g if n.layer is not None]
-        first = tagged[0] if tagged else len(g.nodes)
-        last = tagged[-1] if tagged else -1
-        buckets: dict = {"pre": [], "post": []}
-        for n in g:
-            if n.layer is not None:
-                buckets.setdefault(n.layer, []).append(n.id)
-            elif n.id < first:
-                buckets["pre"].append(n.id)
-            elif n.id > last:
-                buckets["post"].append(n.id)
-            else:
-                # untagged interior node: attach to the previous tagged layer
-                prev = max((t for t in buckets if isinstance(t, int)), default="pre")
-                buckets.setdefault(prev, []).append(n.id)
-        return buckets
-
-    b, d = split(base), split(dist)
+    b, d = split_layer_buckets(base), split_layer_buckets(dist)
     keys = sorted({k for k in list(b) + list(d) if isinstance(k, int)})
     plans = [LayerPlan("pre", b.get("pre", []), d.get("pre", []))]
     plans += [LayerPlan(k, b.get(k, []), d.get(k, [])) for k in keys]
@@ -93,6 +107,10 @@ class MemoStats:
     layers: int = 0
     memo_hits: int = 0
     facts_replayed: int = 0
+    # stamped-graph fast path: fingerprints/ext-input lists served from the
+    # template cache, and dist nodes settled without a cleanup re-dispatch
+    fp_cached: int = 0
+    settled_nodes: int = 0
 
 
 class PartitionedVerifier:
@@ -106,8 +124,11 @@ class PartitionedVerifier:
         self.memoize = memoize
         self.engine = engine  # WorklistEngine: semi-naive per-layer rewriting
         self.stats = MemoStats()
-        # memo: fingerprint -> (base_nodes, dist_nodes, [fact templates])
-        self._memo: dict[tuple, tuple[list[int], list[int], list[Fact]]] = {}
+        # memo: fingerprint -> (base_nodes, dist_nodes, base_ext, [fact templates])
+        self._memo: dict[tuple, tuple] = {}
+        # stamped fast path: template tag -> (b_struct, d_struct, delta,
+        #                                     base_ext, dist_ext)
+        self._tpl_cache: dict[int, tuple] = {}
 
     # -- signatures -----------------------------------------------------------
     def _ext_inputs(self, g: Graph, nids: Sequence[int]) -> list[int]:
@@ -120,11 +141,38 @@ class PartitionedVerifier:
                     ext.append(i)
         return ext
 
-    def _input_signature(self, plan: LayerPlan) -> Optional[tuple]:
+    def _stamp_period(self, key) -> Optional[int]:
+        """Stamped period index of a plan key, when BOTH graphs are stamped
+        and the key lies in a stamped (cloned) period."""
+        sb, sd = self.prop.base.stamp, self.prop.dist.stamp
+        if sb is None or sd is None or not isinstance(key, int):
+            return None
+        p = sb.period_of_tag(key)
+        if p <= sb.template_period or sd.period_of_tag(key) != p:
+            return None
+        if sb.total_periods != sd.total_periods or p >= sb.total_periods:
+            return None
+        return p
+
+    def _plan_ext(self, plan: LayerPlan) -> tuple[list[int], list[int]]:
+        """(base_ext, dist_ext) — from the template cache for stamped
+        periods (O(boundary)), computed exactly otherwise (O(layer))."""
+        p = self._stamp_period(plan.key)
+        if p is not None:
+            tpl = self._tpl_cache.get(self.prop.base.stamp.template_tag(plan.key))
+            if tpl is not None:
+                sb, sd = self.prop.base.stamp, self.prop.dist.stamp
+                self.stats.fp_cached += 1
+                return ([sb.shift_node(e, p) for e in tpl[3]],
+                        [sd.shift_node(e, p) for e in tpl[4]])
+        return (self._ext_inputs(self.prop.base, plan.base_nodes),
+                self._ext_inputs(self.prop.dist, plan.dist_nodes))
+
+    def _input_signature(self, plan: LayerPlan,
+                         ext: Optional[tuple[list[int], list[int]]] = None) -> tuple:
         """Signature of incoming facts on the layer's external dist inputs,
         with baseline nodes encoded positionally (ext-input index)."""
-        base_ext = self._ext_inputs(self.prop.base, plan.base_nodes)
-        dist_ext = self._ext_inputs(self.prop.dist, plan.dist_nodes)
+        base_ext, dist_ext = ext if ext is not None else self._plan_ext(plan)
         bpos = {b: i for i, b in enumerate(base_ext)}
         sig = []
         for j, d in enumerate(dist_ext):
@@ -136,11 +184,18 @@ class PartitionedVerifier:
                     )
         return tuple(sorted(sig))
 
-    def _fingerprint(self, plan: LayerPlan) -> tuple:
-        """Memoization key: normalized structural hashes of both layer
-        subgraphs + incoming-fact signature + the base<->dist slice-offset
-        *deltas* (so layer i slicing W[i] on both sides matches layer j
-        slicing W[j], but never W[i] vs W[j])."""
+    def _struct_parts(self, plan: LayerPlan,
+                      ext: tuple[list[int], list[int]]) -> tuple:
+        """(base_fp, dist_fp, slice-offset delta) — cached for stamped
+        periods: clones share the template's structure, and their base/dist
+        slice offsets advance in lockstep so the *delta* is invariant."""
+        p = self._stamp_period(plan.key)
+        tpl_key = None
+        if p is not None:
+            tpl_key = self.prop.base.stamp.template_tag(plan.key)
+            tpl = self._tpl_cache.get(tpl_key)
+            if tpl is not None:
+                return tpl[0], tpl[1], tpl[2]
         b_off = self.prop.base.slice_offsets(plan.base_nodes)
         d_off = self.prop.dist.slice_offsets(plan.dist_nodes)
         if len(b_off) == len(d_off):
@@ -149,58 +204,85 @@ class PartitionedVerifier:
             )
         else:
             delta = (tuple(b_off), tuple(d_off))  # unmatched: raw (no false merge)
-        return (
-            self.prop.base.fingerprint(sorted(plan.base_nodes), normalize_slices=True),
-            self.prop.dist.fingerprint(sorted(plan.dist_nodes), normalize_slices=True),
-            self._input_signature(plan),
-            delta,
-        )
+        b_fp = self.prop.base.fingerprint(sorted(plan.base_nodes), normalize_slices=True)
+        d_fp = self.prop.dist.fingerprint(sorted(plan.dist_nodes), normalize_slices=True)
+        # record the template period's parts for its stamped clones
+        sb = self.prop.base.stamp
+        if (sb is not None and self.prop.dist.stamp is not None
+                and isinstance(plan.key, int)
+                and sb.period_of_tag(plan.key) == sb.template_period):
+            self._tpl_cache[plan.key] = (b_fp, d_fp, delta, ext[0], ext[1])
+        return b_fp, d_fp, delta
+
+    def _fingerprint(self, plan: LayerPlan,
+                     ext: tuple[list[int], list[int]]) -> tuple:
+        """Memoization key: normalized structural hashes of both layer
+        subgraphs + incoming-fact signature + the base<->dist slice-offset
+        *deltas* (so layer i slicing W[i] on both sides matches layer j
+        slicing W[j], but never W[i] vs W[j])."""
+        b_fp, d_fp, delta = self._struct_parts(plan, ext)
+        return (b_fp, d_fp, self._input_signature(plan, ext), delta)
 
     # -- replay ------------------------------------------------------------------
-    def _replay(self, memo, plan: LayerPlan) -> None:
-        src_b, src_d, facts = memo
-        bmap = self._correspondence(self.prop.base, src_b, plan.base_nodes)
-        dmap = self._correspondence(self.prop.dist, src_d, plan.dist_nodes)
-        for f in facts:
-            nb, nd = bmap.get(f.base), dmap.get(f.dist)
-            if nb is not None and nd is not None:
-                self.prop.store.add(replace(f, base=nb, dist=nd))
-                self.stats.facts_replayed += 1
-
-    def _correspondence(self, g: Graph, src: Sequence[int], dst: Sequence[int]) -> dict[int, int]:
-        m = dict(zip(sorted(src), sorted(dst)))
-        # external inputs correspond by first-use order
-        for es, ed in zip(self._ext_inputs(g, src), self._ext_inputs(g, dst)):
-            m[es] = ed
-        return m
+    def _replay(self, memo, plan: LayerPlan, dst_bext: list[int]) -> None:
+        src_b, src_d, src_bext, facts = memo
+        bmap = dict(zip(src_b, plan.base_nodes))
+        bmap.update(zip(src_bext, dst_bext))
+        dmap = dict(zip(src_d, plan.dist_nodes))
+        emit = self.prop.emit
+        before = self.prop.store.num_derived
+        if self.engine is not None:
+            with self.engine.settling(plan.dist_nodes):
+                for f in facts:
+                    nb, nd = bmap.get(f.base), dmap.get(f.dist)
+                    if nb is not None and nd is not None:
+                        emit(f.moved(nb, nd))
+            self.stats.settled_nodes += len(plan.dist_nodes)
+        else:
+            for f in facts:
+                nb, nd = bmap.get(f.base), dmap.get(f.dist)
+                if nb is not None and nd is not None:
+                    emit(f.moved(nb, nd))
+        self.stats.facts_replayed += self.prop.store.num_derived - before
 
     # -- main loop --------------------------------------------------------------
     def run(self) -> MemoStats:
         plans = partition_layers(self.prop.base, self.prop.dist)
-        for plan in plans:
-            if not plan.dist_nodes:
-                continue
-            self.stats.layers += 1
-            fp = self._fingerprint(plan) if (self.memoize and isinstance(plan.key, int)) else None
-            if fp is not None and fp in self._memo:
-                self.stats.memo_hits += 1
-                self._replay(self._memo[fp], plan)
-                continue
-            self._rewrite_layer(plan)
-            if fp is not None:
-                inside_d = set(plan.dist_nodes)
-                inside_b = set(plan.base_nodes)
-                ext_b = set(self._ext_inputs(self.prop.base, plan.base_nodes))
-                facts = [
-                    f
-                    for d in plan.dist_nodes
-                    for f in self.prop.store.facts(d)
-                    if f.base in inside_b or f.base in ext_b
-                ]
-                self._memo[fp] = (list(plan.base_nodes), list(plan.dist_nodes), facts)
+        pool = None
+        if self.workers > 1 and self.engine is None:
+            # one pool for the whole run (pass-engine Fig. 5 path)
+            pool = _fut.ThreadPoolExecutor(max_workers=self.workers)
+        try:
+            for plan in plans:
+                if not plan.dist_nodes:
+                    continue
+                self.stats.layers += 1
+                fp = ext = None
+                if self.memoize and isinstance(plan.key, int):
+                    ext = self._plan_ext(plan)
+                    fp = self._fingerprint(plan, ext)
+                if fp is not None and fp in self._memo:
+                    self.stats.memo_hits += 1
+                    self._replay(self._memo[fp], plan, ext[0])
+                    continue
+                self._rewrite_layer(plan, pool)
+                if fp is not None:
+                    inside_b = set(plan.base_nodes)
+                    ext_b_set = set(ext[0])
+                    facts = [
+                        f
+                        for d in plan.dist_nodes
+                        for f in self.prop.store.facts(d)
+                        if f.base in inside_b or f.base in ext_b_set
+                    ]
+                    self._memo[fp] = (sorted(plan.base_nodes),
+                                      sorted(plan.dist_nodes), ext[0], facts)
+        finally:
+            if pool is not None:
+                pool.shutdown(wait=True)
         return self.stats
 
-    def _rewrite_layer(self, plan: LayerPlan) -> None:
+    def _rewrite_layer(self, plan: LayerPlan, pool=None) -> None:
         if self.engine is not None:
             # semi-naive worklist: seed the layer's nodes once, then re-visit
             # only consumers of changed nodes until the layer reaches fixpoint
@@ -210,10 +292,9 @@ class PartitionedVerifier:
         for _round in range(3):  # fixpoint rounds within the layer
             before = self.prop.store.num_derived
             for stage in stages:
-                if self.workers > 1 and len(stage) > 8:
+                if pool is not None and len(stage) > 8:
                     topos = stage_topologies(self.prop.dist, stage)
-                    with _fut.ThreadPoolExecutor(max_workers=self.workers) as pool:
-                        list(pool.map(lambda t: self.prop.run(t, max_passes=1), topos))
+                    list(pool.map(lambda t: self.prop.run(t, max_passes=1), topos))
                 else:
                     self.prop.run(stage, max_passes=1)
             if self.prop.store.num_derived == before:

@@ -28,7 +28,7 @@ These power bug localization (§5.3) and bug categorization (§7.3).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass
 from typing import Iterable, Optional
 
 from .bijection import Layout
@@ -54,20 +54,32 @@ class Fact:
     idxset: frozenset = frozenset()  # loopred: accumulated local indices
 
     def key(self) -> tuple:
-        return (
-            self.kind,
-            self.base,
-            self.dist,
-            self.size,
-            self.layout.atoms,
-            self.layout.perm,
-            self.layout.dst_groups,
-            self.reduce_op,
-            self.dim,
-            self.nchunk,
-            self.index,
-            self.idxset,
-        )
+        # hot path (every store lookup/add dedups on it): computed once
+        k = self.__dict__.get("_key")
+        if k is None:
+            k = (
+                self.kind,
+                self.base,
+                self.dist,
+                self.size,
+                self.layout.atoms,
+                self.layout.perm,
+                self.layout.dst_groups,
+                self.reduce_op,
+                self.dim,
+                self.nchunk,
+                self.index,
+                self.idxset,
+            )
+            object.__setattr__(self, "_key", k)
+        return k
+
+    def moved(self, base: int, dist: int) -> "Fact":
+        """Copy with renamed endpoints (fast-path for memo replay; avoids
+        ``dataclasses.replace``'s per-call field introspection)."""
+        return Fact(self.kind, base, dist, self.size, self.layout,
+                    self.reduce_op, self.dim, self.nchunk, self.index,
+                    self.idxset)
 
     @property
     def clean(self) -> bool:
@@ -119,26 +131,46 @@ class RelStore:
         self._seen: set[tuple] = set()
         self.diagnostics: list[Diagnostic] = []
         self.num_derived = 0
-        # notified with each newly-added fact; the worklist engine hooks in
-        # here to enqueue the dist-graph consumers of the changed node
+        # notified with each batch of newly-added facts (a tuple/list); the
+        # worklist engine hooks in here to enqueue the dist-graph consumers
+        # of the changed nodes
         self.listeners: list = []
         # scopes/nodes verified wholesale by a trusted meta rule: their
         # internal nodes are exempt from frontier localization
         self.covered_scopes: set[str] = set()
         self.covered_nodes: set[int] = set()
 
+    def _index(self, fact: Fact) -> None:
+        self.by_dist.setdefault(fact.dist, []).append(fact)
+        self.by_base.setdefault(fact.base, []).append(fact)
+        self.by_dist_kind.setdefault((fact.dist, fact.kind), []).append(fact)
+        self.num_derived += 1
+
     def add(self, fact: Fact) -> bool:
         k = fact.key()
         if k in self._seen:
             return False
         self._seen.add(k)
-        self.by_dist.setdefault(fact.dist, []).append(fact)
-        self.by_base.setdefault(fact.base, []).append(fact)
-        self.by_dist_kind.setdefault((fact.dist, fact.kind), []).append(fact)
-        self.num_derived += 1
+        self._index(fact)
         for listener in self.listeners:
-            listener(fact)
+            listener((fact,))
         return True
+
+    def add_batch(self, facts: Iterable[Fact]) -> int:
+        """Add many facts with a single (batched) listener notification —
+        the merge path of sharded parallel rewriting."""
+        added = []
+        for fact in facts:
+            k = fact.key()
+            if k in self._seen:
+                continue
+            self._seen.add(k)
+            self._index(fact)
+            added.append(fact)
+        if added:
+            for listener in self.listeners:
+                listener(added)
+        return len(added)
 
     def facts(self, dist: int) -> list[Fact]:
         return self.by_dist.get(dist, [])
@@ -163,4 +195,4 @@ class RelStore:
         for facts in other.by_dist.values():
             for f in facts:
                 if f.base in base_map and f.dist in dist_map:
-                    self.add(replace(f, base=base_map[f.base], dist=dist_map[f.dist]))
+                    self.add(f.moved(base_map[f.base], dist_map[f.dist]))

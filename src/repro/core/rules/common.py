@@ -16,16 +16,26 @@ def move_dim(rank: int, src: int, dst: int) -> tuple[int, ...]:
     return tuple(dims)
 
 
+_SHARD_STACK_CACHE: dict[tuple, Layout] = {}
+
+
 def shard_stack_layout(shape: Sequence[int], dim: int, c: int) -> Layout:
     """Layout mapping a global tensor to its rank-stacked shards:
-    ``B(shape) -> (c, *local)`` with dim ``dim`` chunked by ``c``."""
+    ``B(shape) -> (c, *local)`` with dim ``dim`` chunked by ``c``.
+    Interned: rules construct the same handful of layouts per graph pair."""
     shape = tuple(int(s) for s in shape)
+    key = (shape, dim, c)
+    lay = _SHARD_STACK_CACHE.get(key)
+    if lay is not None:
+        return lay
     if shape[dim] % c != 0:
         raise NotSplitMerge(f"dim {dim} of {shape} not divisible by {c}")
     lay = Layout.identity(shape)
     split = shape[:dim] + (c, shape[dim] // c) + shape[dim + 1 :]
     lay = lay.then_reshape(split)
-    return lay.then_transpose(move_dim(len(split), dim, 0))
+    lay = lay.then_transpose(move_dim(len(split), dim, 0))
+    _SHARD_STACK_CACHE[key] = lay
+    return lay
 
 
 def dup_id(f: Fact) -> bool:

@@ -3,33 +3,111 @@
 The pass-based reference engine rescans every node on every pass —
 O(passes x nodes) handler firings even when a single fact changed.  The
 worklist engine visits each node once and then re-visits a node only when
-one of its *inputs* gained a fact: :meth:`RelStore.add` notifies a listener,
-which enqueues the dist-graph consumers of the changed node (via the
-precomputed consumer index on :class:`~repro.core.ir.Graph`), tagged with
-the fact kinds that changed so rules that never consume those kinds are
-skipped (the ``consumes`` declaration on each registered rule).
+one of its *inputs* gained a fact: :meth:`RelStore.add` notifies a listener
+with each batch of new facts, which enqueues the dist-graph consumers of
+the changed nodes (via the precomputed consumer index on
+:class:`~repro.core.ir.Graph`), tagged with the fact kinds that changed so
+rules that never consume those kinds are skipped (the ``consumes``
+declaration on each registered rule).
 
 Restricted runs (``run(nodes=layer_nodes)``) drive per-layer rewriting in
 :class:`~repro.core.partition.PartitionedVerifier`: facts crossing the
 layer boundary land in ``pending`` and are drained by a later run — the
 final unrestricted ``run()`` visits only never-visited nodes plus the
-pending frontier, never the whole graph again.
+pending frontier, never the whole graph again.  Memo-hit layers are
+**settled** (:meth:`settling`): their replayed facts mark only consumers
+*outside* the layer, and the layer's nodes count as visited — the memo
+already captured the layer's fixpoint, so re-dispatching its rules would
+derive nothing.
 
-``rule_invocations`` mirrors the Propagator's counter; benchmarks compare it
-against the pass-based engine's count on the same graph pair
+With ``workers > 1`` a restricted run's initial sweep executes the paper's
+Fig. 5 parallel rewriting: the layer's topological stages are split into
+independent subtopologies dispatched on a persistent thread pool.  Each
+shard evaluates against a read-through overlay store (committed facts are
+frozen for the duration of a stage) and the overlays are merged through a
+single :meth:`RelStore.add_batch` per shard — rule matching never observes
+a half-written store.  The serial drain then runs the incremental tail to
+fixpoint, so verdicts and fact sets are identical to a serial run.
+
+``rule_invocations`` mirrors the Propagator's counter; benchmarks compare
+it against the pass-based engine's count on the same graph pair
 (``benchmarks/bench_propagation.py``).
 """
 from __future__ import annotations
 
+import concurrent.futures as _fut
 import heapq
+from contextlib import contextmanager
 from typing import Iterable, Optional
 
-from ..relations import Fact
+from ..relations import Diagnostic, Fact, RelStore
+
+# minimum seeded nodes before a restricted run fans out on the pool
+_PARALLEL_MIN_NODES = 24
+
+
+class _ShardStore:
+    """Read-through overlay for one parallel shard.
+
+    Reads see the committed store plus this shard's local facts; writes
+    buffer locally and are merged (deduplicated) into the committed store
+    after the stage barrier.  The committed store is never written while
+    shards run, so no locking is needed.
+    """
+
+    def __init__(self, committed: RelStore) -> None:
+        self._c = committed
+        self.by_dist: dict[int, list[Fact]] = {}
+        self.by_base: dict[int, list[Fact]] = {}
+        self.by_dist_kind: dict[tuple[int, str], list[Fact]] = {}
+        self._seen: set[tuple] = set()
+        self.new_facts: list[Fact] = []
+        self.diagnostics: list[Diagnostic] = []
+        self.num_derived = committed.num_derived
+        self.covered_scopes = committed.covered_scopes
+        self.covered_nodes = committed.covered_nodes
+
+    def add(self, fact: Fact) -> bool:
+        k = fact.key()
+        if k in self._seen or k in self._c._seen:
+            return False
+        self._seen.add(k)
+        self.by_dist.setdefault(fact.dist, []).append(fact)
+        self.by_base.setdefault(fact.base, []).append(fact)
+        self.by_dist_kind.setdefault((fact.dist, fact.kind), []).append(fact)
+        self.new_facts.append(fact)
+        self.num_derived += 1
+        return True
+
+    def facts(self, dist: int) -> list[Fact]:
+        loc = self.by_dist.get(dist)
+        base = self._c.facts(dist)
+        return base + loc if loc else base
+
+    def facts_kind(self, dist: int, kind: str) -> list[Fact]:
+        loc = self.by_dist_kind.get((dist, kind))
+        base = self._c.facts_kind(dist, kind)
+        return base + loc if loc else base
+
+    def facts_for_base(self, base: int) -> list[Fact]:
+        loc = self.by_base.get(base)
+        com = self._c.facts_for_base(base)
+        return com + loc if loc else com
+
+    def facts_for_base_kind(self, base: int, kind: str) -> list[Fact]:
+        return [f for f in self.facts_for_base(base) if f.kind == kind]
+
+    def verified(self, dist: int) -> bool:
+        return bool(self._c.by_dist.get(dist)) or bool(self.by_dist.get(dist))
+
+    def diag(self, dist: int, category: str, detail: str, repair=None) -> None:
+        self.diagnostics.append(Diagnostic(dist, category, detail, repair))
 
 
 class WorklistEngine:
-    def __init__(self, prop) -> None:
+    def __init__(self, prop, workers: int = 0) -> None:
         self.prop = prop
+        self.workers = int(workers or 0)
         self._consumers = prop.dist.consumer_index()
         # nodes to (re)visit outside the active run, kind-tagged
         self.pending: dict[int, set[str]] = {}
@@ -38,16 +116,27 @@ class WorklistEngine:
         self._inheap: dict[int, Optional[set[str]]] = {}  # None = fire all rules
         self._allowed: Optional[set[int]] = None
         self._active = False
-        prop.store.listeners.append(self._on_fact)
+        self._settling: Optional[set[int]] = None
+        self._pool: Optional[_fut.ThreadPoolExecutor] = None
+        prop.store.listeners.append(self._on_facts)
 
     @property
     def rule_invocations(self) -> int:
         return self.prop.rule_invocations
 
+    def close(self) -> None:
+        if self._pool is not None:
+            self._pool.shutdown(wait=True)
+            self._pool = None
+
     # ------------------------------------------------------------ listeners
-    def _on_fact(self, fact: Fact) -> None:
-        for c in self._consumers.get(fact.dist, ()):
-            self._mark(c, fact.kind)
+    def _on_facts(self, facts: Iterable[Fact]) -> None:
+        settling = self._settling
+        for fact in facts:
+            for c in self._consumers.get(fact.dist, ()):
+                if settling is not None and c in settling:
+                    continue
+                self._mark(c, fact.kind)
 
     def _mark(self, nid: int, kind: str) -> None:
         if self._active and (self._allowed is None or nid in self._allowed):
@@ -59,6 +148,23 @@ class WorklistEngine:
                 cur.add(kind)
         else:
             self.pending.setdefault(nid, set()).add(kind)
+
+    # -------------------------------------------------------------- settling
+    @contextmanager
+    def settling(self, nids: Iterable[int]):
+        """Memo replay for a layer: the replayed facts are that layer's
+        fixpoint, so consumers *inside* the layer need no re-visit and the
+        layer's nodes count as visited.  Facts arriving later (after the
+        context exits) still mark the settled nodes semi-naively."""
+        prev = self._settling
+        self._settling = set(nids)
+        try:
+            yield
+        finally:
+            settled, self._settling = self._settling, prev
+            self.visited.update(settled)
+            for nid in settled:
+                self.pending.pop(nid, None)
 
     # ------------------------------------------------------------------ run
     def run(self, nodes: Optional[Iterable[int]] = None) -> None:
@@ -76,6 +182,10 @@ class WorklistEngine:
         else:
             allowed = set(nodes)
             seeds = {n: None for n in allowed}
+        if (self.workers > 1 and allowed is not None
+                and len(seeds) >= _PARALLEL_MIN_NODES):
+            self._sweep_parallel(sorted(seeds))
+            seeds = {}
         for nid in list(self.pending):
             if allowed is None or nid in allowed:
                 kinds = self.pending.pop(nid)
@@ -89,7 +199,9 @@ class WorklistEngine:
             while True:
                 while self._heap:
                     nid = heapq.heappop(self._heap)
-                    kinds = self._inheap.pop(nid, None)
+                    if nid not in self._inheap:
+                        continue  # superseded entry
+                    kinds = self._inheap.pop(nid)
                     self.visited.add(nid)
                     self.prop.dispatch(
                         dist[nid], None if kinds is None else frozenset(kinds)
@@ -101,3 +213,42 @@ class WorklistEngine:
         finally:
             self._active = False
             self._allowed = None
+
+    # ------------------------------------------------------- parallel sweep
+    def _sweep_parallel(self, nids: list[int]) -> None:
+        """Initial visit of a restricted run on the thread pool (Fig. 5):
+        stage by stage, independent subtopologies evaluate against overlay
+        stores merged through one add_batch per shard.  Facts derived here
+        mark consumers into ``pending``; the serial drain finishes the
+        incremental tail."""
+        from ...core.partition import stage_topologies, topological_stages
+
+        if self._pool is None:
+            self._pool = _fut.ThreadPoolExecutor(max_workers=self.workers)
+        prop, dist = self.prop, self.prop.dist
+        prop.prewarm_shared()
+        store = prop.store
+        for stage in topological_stages(dist, nids):
+            self.visited.update(stage)
+            shards = stage_topologies(dist, stage) if len(stage) > 2 else [list(stage)]
+            if len(shards) < 2 or len(stage) < 8:
+                for nid in stage:
+                    prop.dispatch(dist[nid])
+            else:
+                def run_shard(shard_nids: list[int]):
+                    sprop = prop.shard_clone(_ShardStore(store))
+                    for nid in shard_nids:
+                        sprop.dispatch(dist[nid])
+                    return sprop
+
+                for sprop in list(self._pool.map(run_shard, shards)):
+                    store.add_batch(sprop.store.new_facts)
+                    store.diagnostics.extend(sprop.store.diagnostics)
+                    prop.rule_invocations += sprop.rule_invocations
+            # marks targeting this stage came from earlier stages' facts,
+            # which the dispatch above already saw: drop them so the serial
+            # drain doesn't re-visit the whole layer (facts derived in THIS
+            # stage only ever mark strictly later stages — no intra-stage
+            # edges — so nothing is lost)
+            for nid in stage:
+                self.pending.pop(nid, None)

@@ -56,6 +56,9 @@ class Propagator:
         self._loopred_base_cache: dict[tuple, Optional[int]] = {}
         self._ec_consumers: Optional[dict[int, list[int]]] = None
         self._engine = None
+        # (op-signature, layout) -> composed layout for the baseline layout
+        # closure in emit(): repeated layers recompute identical compositions
+        self._closure_cache: dict[tuple, Optional[Layout]] = {}
 
     # ------------------------------------------------------------------ api
     def register_input(self, fact: Fact) -> None:
@@ -92,6 +95,28 @@ class Propagator:
     def run_worklist(self, nodes: Optional[Iterable[int]] = None) -> None:
         """Semi-naive worklist evaluation to fixpoint."""
         self.worklist_engine().run(nodes)
+
+    # ------------------------------------------------------ parallel shards
+    def prewarm_shared(self) -> None:
+        """Materialize lazily-built shared structures (consumer indexes, the
+        e-class consumer map) before parallel sharding — shards then only
+        read them."""
+        if len(self.base.nodes):
+            self._class_consumers(0)
+        self.base.consumer_index()
+        self.dist.consumer_index()
+
+    def shard_clone(self, store) -> "Propagator":
+        """Shallow copy evaluating against a shard-local overlay store.
+        Graphs, e-graph and caches are shared read-only; the invocation
+        counter restarts so the parent can merge it after the barrier."""
+        import copy
+
+        p = copy.copy(self)
+        p.store = store
+        p.rule_invocations = 0
+        p._engine = None
+        return p
 
     def worklist_engine(self):
         if self._engine is None:
@@ -139,14 +164,22 @@ class Propagator:
                 continue
             if z.op not in ("reshape", "transpose"):
                 continue
-            try:
-                op_lay = Layout.identity(self.base[fact.base].shape)
-                if z.op == "reshape":
-                    op_lay = op_lay.then_reshape(z.shape)
-                else:
-                    op_lay = op_lay.then_transpose(z.param("permutation"))
-                new_lay = op_lay.inverse().compose(fact.layout)
-            except (NotSplitMerge, ValueError):
+            src_shape = self.base[fact.base].shape
+            arg = z.shape if z.op == "reshape" else z.param("permutation")
+            ck = (z.op, src_shape, arg, fact.layout)
+            new_lay = self._closure_cache.get(ck, False)
+            if new_lay is False:
+                try:
+                    op_lay = Layout.identity(src_shape)
+                    if z.op == "reshape":
+                        op_lay = op_lay.then_reshape(z.shape)
+                    else:
+                        op_lay = op_lay.then_transpose(arg)
+                    new_lay = op_lay.inverse().compose(fact.layout)
+                except (NotSplitMerge, ValueError):
+                    new_lay = None
+                self._closure_cache[ck] = new_lay
+            if new_lay is None:
                 continue
             self.emit(replace(fact, base=zid, layout=new_lay), _depth + 1)
 

@@ -93,15 +93,19 @@ def _scope_of(eqn) -> str:
 _LAYER_RE = re.compile(r"(?:^|/)layer[_]?(\d+)")
 _SUB_RE = re.compile(r"(?:^|/)sub(\d+)")
 
+# tag stride between consecutive ``layer<i>`` scopes: room for per-layer
+# sub-scopes (decode blocks) without colliding with the next layer's tag
+LAYER_TAG_STRIDE = 4096
+
 
 def default_layer_tag(scope: str) -> Optional[int]:
     m = _LAYER_RE.search(scope)
     if m is None:
         return None
-    tag = int(m.group(1))
+    tag = int(m.group(1)) * LAYER_TAG_STRIDE
     ms = _SUB_RE.search(scope)
     if ms is not None:  # block-level scope with per-layer sub-scopes (decode)
-        tag = tag * 4096 + int(ms.group(1)) + 1
+        tag += int(ms.group(1)) + 1
     return tag
 
 
@@ -155,6 +159,25 @@ class Tracer:
         # node id -> concrete value for int/bool scalar consts, so scalar
         # index arithmetic folds at trace time (see _try_fold)
         self._scalar_val: dict[int, Any] = {}
+        # hash-consed const nodes: unrolled layers re-create identical
+        # literals/closure consts per layer; dedup keeps the graph small and
+        # makes repeated layers reference period-invariant leaves (required
+        # by layer stamping; sound because the e-graph already merges
+        # equal-payload consts into one e-class)
+        self._const_cache: dict[tuple, int] = {}
+
+    def _add_const(self, shape, dtype, value_hash: Optional[str], val=None) -> int:
+        key = (value_hash, tuple(shape), str(dtype))
+        if value_hash is not None:
+            hit = self._const_cache.get(key)
+            if hit is not None:
+                return hit
+        nid = self.g.add("const", (), shape, dtype, {"value_hash": value_hash})
+        if val is not None:
+            self._record_scalar(nid, val)
+        if value_hash is not None:
+            self._const_cache[key] = nid
+        return nid
 
     def _record_scalar(self, nid: int, val) -> int:
         arr = np.asarray(val)
@@ -197,9 +220,7 @@ class Tracer:
             return None
         val = np.asarray(fn(*[self._scalar_val[i] for i in in_ids]))
         val = val.astype(np.dtype(aval.dtype))
-        nid = self.g.add("const", (), (), str(aval.dtype),
-                         {"value_hash": _const_hash(val)})
-        return self._record_scalar(nid, val)
+        return self._add_const((), str(aval.dtype), _const_hash(val), val)
 
     def _emit_eqn(self, eqn, in_ids: list[int]) -> list[int]:
         prim = eqn.primitive.name
@@ -305,27 +326,22 @@ class Tracer:
 
         def read(var) -> int:
             if hasattr(var, "val"):  # Literal
-                nid = self.g.add(
-                    "const",
-                    (),
+                return self._add_const(
                     tuple(np.shape(var.val)),
                     str(np.asarray(var.val).dtype),
-                    {"value_hash": _const_hash(var.val)},
+                    _const_hash(var.val),
+                    var.val,
                 )
-                return self._record_scalar(nid, var.val)
             return env[var]
 
         for cv, cval in zip(jaxpr.constvars, consts):
             aval = cv.aval
-            env[cv] = self.g.add(
-                "const",
-                (),
+            env[cv] = self._add_const(
                 tuple(aval.shape),
                 str(aval.dtype),
-                {"value_hash": _const_hash(cval) if cval is not None else None},
+                _const_hash(cval) if cval is not None else None,
+                cval,
             )
-            if cval is not None:
-                self._record_scalar(env[cv], cval)
         for iv, nid in zip(jaxpr.invars, in_ids):
             env[iv] = nid
 
@@ -448,6 +464,9 @@ def trace(
     ]
     out_ids = t.trace_jaxpr(closed.jaxpr, closed.consts, in_ids)
     t.g.mark_output(*out_ids)
+    # outer global-shape leaf -> per-shard re-issued leaf (layer stamping
+    # grows the dead outer leaves alongside their per-shard aliases)
+    t.g.input_alias = dict(t.sharded_input_remap)
     in_ids = [t.sharded_input_remap.get(i, i) for i in in_ids]
     return t.g, in_ids, out_ids
 

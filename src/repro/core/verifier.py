@@ -86,14 +86,21 @@ class Report:
 class VerifyOptions:
     partition: bool = True
     memoize: bool = True
-    # pass-engine knobs: the worklist engine is single-threaded and runs to
-    # true fixpoint, so these two only apply with engine="passes"
+    # staged parallel rewriting (paper Fig. 5).  Applies to BOTH engines:
+    # the pass engine fans stage subtopologies out on a per-run pool; the
+    # worklist engine runs its initial per-layer sweep on shard-local fact
+    # overlays merged through RelStore.add_batch.  0/1 = serial.
     parallel_workers: int = 0
-    max_passes: int = 30
+    max_passes: int = 30  # pass engine only
     axis: str = "model"
     # "worklist": semi-naive incremental evaluation (default);
     # "passes": the pass-based rescan loop (parity reference)
     engine: str = "worklist"
+    # layer stamping (repro.core.stamp): trace O(block_period) layers and
+    # clone the rest in the IR.  Only consulted by the model-level entry
+    # points (verify_model_tp / verify_decode_tp); verify_graphs receives
+    # already-built graphs.
+    stamp: bool = True
 
 
 def _output_ok(store: RelStore, b_out: int, d_out: int, spec: OutputSpec, size: int) -> bool:
@@ -181,7 +188,8 @@ def verify_graphs(
     if options.engine not in ("worklist", "passes"):
         raise ValueError(f"unknown engine {options.engine!r}: worklist|passes")
     prop = Propagator(base, dist, size, axis=options.axis)
-    engine = WorklistEngine(prop) if options.engine == "worklist" else None
+    engine = (WorklistEngine(prop, workers=options.parallel_workers)
+              if options.engine == "worklist" else None)
     for f in input_facts:
         b, d = base_inputs[f.base_index], dist_inputs[f.dist_index]
         if f.kind == DUP:
@@ -191,20 +199,25 @@ def verify_graphs(
         else:
             raise ValueError(f.kind)
     memo = None
-    if options.partition:
-        pv = PartitionedVerifier(prop, options.parallel_workers, options.memoize,
-                                 engine=engine)
-        memo = pv.run()
-        if engine is not None:
-            # cross-layer cleanup: never-visited nodes (memoized layers) plus
-            # the pending consumers of facts that crossed layer boundaries
+    try:
+        if options.partition:
+            pv = PartitionedVerifier(prop, options.parallel_workers, options.memoize,
+                                     engine=engine)
+            memo = pv.run()
+            if engine is not None:
+                # cross-layer cleanup: never-visited nodes plus the pending
+                # consumers of facts that crossed layer boundaries (settled
+                # memo-hit layers are not re-dispatched)
+                engine.run()
+            else:
+                prop.run(max_passes=2)  # cross-layer cleanup passes
+        elif engine is not None:
             engine.run()
         else:
-            prop.run(max_passes=2)  # cross-layer cleanup passes
-    elif engine is not None:
-        engine.run()
-    else:
-        prop.run(max_passes=options.max_passes)
+            prop.run(max_passes=options.max_passes)
+    finally:
+        if engine is not None:
+            engine.close()
 
     specs = list(output_specs or [OutputSpec()] * len(dist.outputs))
     outputs_ok = [

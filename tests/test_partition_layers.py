@@ -1,0 +1,47 @@
+"""Layer bucketing regressions: untagged interior nodes must attach to the
+*topologically previous* tag (last seen in node-id order), not the
+numerically largest tag seen so far."""
+from repro.core.ir import Graph
+from repro.core.partition import partition_layers, split_layer_buckets
+
+
+def _chain(tags):
+    """A chain graph whose nodes carry the given layer tags (None allowed)."""
+    g = Graph()
+    prev = g.add("input", (), (4,), "float32")
+    ids = []
+    for t in tags:
+        prev = g.add("tanh", [prev], (4,), "float32", layer=t)
+        ids.append(prev)
+    g.mark_output(prev)
+    return g, ids
+
+
+def test_untagged_interior_attaches_to_last_seen_tag():
+    # tags interleave non-monotonically: 5, 3, <untagged>, 7 — the untagged
+    # node belongs to layer 3 (topologically previous), not 5 (numeric max)
+    g, ids = _chain([5, 3, None, 7])
+    buckets = split_layer_buckets(g)
+    assert ids[2] in buckets[3]
+    assert ids[2] not in buckets[5]
+
+
+def test_untagged_interior_monotone_tags():
+    g, ids = _chain([0, None, 1, None, 2])
+    buckets = split_layer_buckets(g)
+    assert ids[1] in buckets[0]
+    assert ids[3] in buckets[1]
+
+
+def test_pre_and_post_buckets():
+    g = Graph()
+    a = g.add("input", (), (4,), "float32")
+    pre = g.add("neg", [a], (4,), "float32")
+    l0 = g.add("tanh", [pre], (4,), "float32", layer=0)
+    post = g.add("neg", [l0], (4,), "float32")
+    g.mark_output(post)
+    buckets = split_layer_buckets(g)
+    assert pre in buckets["pre"] and a in buckets["pre"]
+    assert post in buckets["post"]
+    plans = partition_layers(g, g)
+    assert [p.key for p in plans] == ["pre", 0, "post"]
