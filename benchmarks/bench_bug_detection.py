@@ -12,9 +12,9 @@ import jax.numpy as jnp
 from jax.sharding import AbstractMesh, PartitionSpec as P
 
 from repro.core import inject_all, trace, trace_sharded, verify_graphs
-from repro.core.modelverify import verify_model_tp
 from repro.core.relations import DUP, SHARD
 from repro.core.verifier import InputFact
+from repro.verify import Plan, verify
 
 
 def _model_graph_suite() -> list[dict]:
@@ -35,8 +35,8 @@ def _model_graph_suite() -> list[dict]:
         t0 = time.perf_counter()
         # batch=2: at batch 1 several layout mutations are unit-dim no-ops
         # that the verifier CORRECTLY accepts (effectively-identity layouts)
-        rep = verify_model_tp("llama3_8b", tp=16, smoke=False, n_layers=2, seq=32,
-                              batch=2, mutate_dist=mutate)
+        rep = verify("llama3_8b", Plan(tp=16, layers=2, seq=32, batch=2),
+                     mutate_dist=mutate)
         dt = time.perf_counter() - t0
         inj = holder.get("inj")
         if inj is None:

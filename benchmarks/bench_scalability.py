@@ -10,8 +10,8 @@ from __future__ import annotations
 
 import time
 
-from repro.core.modelverify import verify_model_tp
 from repro.core.verifier import VerifyOptions
+from repro.verify import Plan, verify
 
 
 def _time(arch="llama3_8b", *, tp=16, layers=4, seq=64, batch=4, stamp=True,
@@ -19,8 +19,10 @@ def _time(arch="llama3_8b", *, tp=16, layers=4, seq=64, batch=4, stamp=True,
     best = float("inf")
     for _ in range(reps):
         t0 = time.perf_counter()
-        rep = verify_model_tp(arch, tp=tp, smoke=False, n_layers=layers, seq=seq,
-                              batch=batch, options=VerifyOptions(stamp=stamp))
+        # one-shot (throwaway session): every rep measures a COLD call so the
+        # fig11 scaling curves stay comparable across PRs
+        rep = verify(arch, Plan(tp=tp, layers=layers, seq=seq, batch=batch),
+                     options=VerifyOptions(stamp=stamp))
         assert rep.verified
         best = min(best, time.perf_counter() - t0)
     return best

@@ -8,11 +8,11 @@ import jax
 import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.core import verify_sharded
-from repro.core.inject import drop_all_reduce
 from repro.core import trace_sharded, trace, verify_graphs
+from repro.core.inject import drop_all_reduce
 from repro.core.relations import DUP, SHARD
 from repro.core.verifier import InputFact
+from repro.verify import Session
 
 B, H, F, LAYERS, TP = 4, 64, 256, 4, 8
 
@@ -41,8 +41,9 @@ avals = (
 specs = (P(), P(None, None, "model"), P(None, "model", None))
 
 print("=== 1. verify the correct parallelization ===")
-report = verify_sharded(baseline, distributed, *avals, size=TP,
-                        in_specs=specs, out_specs=P())
+session = Session()
+report = session.verify_sharded(baseline, distributed, *avals, size=TP,
+                                in_specs=specs, out_specs=P())
 print(report.summary())
 assert report.verified
 

@@ -12,15 +12,19 @@ from .bijection import Layout, NotSplitMerge, infer_bijection, layout_of_ops
 from .egraph import EGraph, GraphEGraph
 from .inject import ALL_INJECTORS, Injection, inject_all
 from .ir import Graph, Node
-from .partition import PartitionedVerifier, partition_layers, topological_stages
+from .partition import (
+    PartitionedVerifier,
+    TemplateCache,
+    partition_layers,
+    topological_stages,
+)
 from .relations import DUP, PARTIAL, SHARD, Fact, RelStore
+from .report import BugSite, CacheStats, PhaseTimings, Report, severity_of
 from .rules import DEFAULT_REGISTRY, Propagator, RuleRegistry, WorklistEngine
 from .trace import trace, trace_sharded
 from .verifier import (
-    BugSite,
     InputFact,
     OutputSpec,
-    Report,
     VerifyOptions,
     localize,
     verify_graphs,
@@ -32,9 +36,11 @@ __all__ = [
     "EGraph", "GraphEGraph", "Graph", "Node",
     "DUP", "SHARD", "PARTIAL", "Fact", "RelStore", "Propagator",
     "DEFAULT_REGISTRY", "RuleRegistry", "WorklistEngine",
-    "PartitionedVerifier", "partition_layers", "topological_stages",
+    "PartitionedVerifier", "TemplateCache", "partition_layers",
+    "topological_stages",
     "trace", "trace_sharded",
-    "BugSite", "InputFact", "OutputSpec", "Report", "VerifyOptions",
+    "BugSite", "CacheStats", "InputFact", "OutputSpec", "PhaseTimings",
+    "Report", "VerifyOptions", "severity_of",
     "localize", "verify_graphs", "verify_sharded",
     "ALL_INJECTORS", "Injection", "inject_all",
 ]

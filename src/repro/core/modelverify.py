@@ -1,153 +1,53 @@
-"""Verify the framework's own model parallelization (the launcher gate and
-the paper's Table-2 workload).
+"""DEPRECATED shims: the model-level entry points moved to ``repro.verify``.
 
-``verify_model_tp(arch, tp)`` traces the single-device forward and the
-TP/EP-sharded per-device forward of the SAME model definition and runs the
-Scalify engine over the pair:
+``verify_model_tp(arch, tp)`` / ``verify_decode_tp(arch, tp)`` remain as
+thin wrappers over ``repro.verify.Session`` so existing call sites keep
+working, but new code should use the Session API directly:
 
-  * layers are unrolled under named scopes -> per-layer memoization fires;
-  * deep models are **layer-stamped** (``repro.core.stamp``): only
-    ``TRACE_PERIODS`` block periods are traced and the remaining layers are
-    cloned directly in the IR, so trace cost is O(block_period) instead of
-    O(n_layers).  ``VerifyOptions(stamp=False)`` disables this; any
-    non-periodic trace falls back to full tracing automatically;
-  * inner scans (attention KV chunks, SSD chunk recurrence) are unrolled so
-    the IR is plain dataflow (the paper's setting);
-  * the vocab-parallel embedding verifies through the trusted-template meta
-    rule; the vocab-parallel head through the column-dot rule;
-  * MoE layers use the dense-masked formulation with expert-FFN TP (the
-    capacity-dispatch execution path is data-dependent scatter/gather and is
-    covered by numerical equivalence tests instead — see DESIGN.md
-    §Arch-applicability).
+    from repro.verify import Session, Plan
+    Session().verify(arch, Plan(tp=16))          # == verify_model_tp
+    Session().verify(arch, Plan.decode(tp=16))   # == verify_decode_tp
+
+The trace/stamp builders these entry points used live in
+``repro.verify.pairs``; the spec-to-fact helpers in ``repro.verify.specs``.
 """
 from __future__ import annotations
 
-import dataclasses
+import warnings
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
-
-from repro.compat import abstract_mesh
-
-from repro.configs import get_config
-from repro.models import Model
-from repro.parallel.ctx import ParallelCtx
-from repro.parallel.sharding import param_specs
-
-from .relations import DUP, SHARD
-from .stamp import TRACE_PERIODS, stamp_graph
-from .trace import LAYER_TAG_STRIDE, trace, trace_sharded
-from .verifier import (
-    InputFact,
-    OutputSpec,
-    Report,
-    VerifyOptions,
-    verify_graphs,
-)
+from .verifier import Report, VerifyOptions
 
 
-def _verify_pspecs(param_shapes, cfg):
-    """param specs for the verification formulation: like execution specs,
-    but MoE experts use FFN-width TP instead of expert parallelism."""
-    specs = param_specs(param_shapes)
+def _session(options):
+    from repro.verify import Session
 
-    def fix(path, spec, leaf):
-        names = tuple(p.key if hasattr(p, "key") else str(p) for p in path)
-        if len(names) >= 2 and names[-2] == "moe" and names[-1] in ("wg", "wu", "wo"):
-            if names[-1] == "wo":
-                return P(None, None, "model", None)  # (nb, E, F, D): shard F
-            return P(None, None, None, "model")  # (nb, E, D, F): shard F
-        return spec
-
-    return jax.tree_util.tree_map_with_path(
-        lambda pth, sp, lf: fix(pth, sp, lf), specs, param_shapes)
+    return Session(options=options)
 
 
-def _round_layers(cfg, n_layers: Optional[int]):
-    if n_layers is None:
-        return cfg
-    # round up to a whole block period (hybrids repeat every P layers)
-    per = cfg.block_period
-    n_layers = max(per, (n_layers + per - 1) // per * per)
-    return dataclasses.replace(cfg, n_layers=n_layers)
+def _tp1_report(arch: str, *, decode: bool, smoke: bool, batch: int,
+                dim2: int, n_layers: Optional[int], options, mutate_dist):
+    """Legacy tp=1 behavior: the Plan API rejects a degenerate plan, but the
+    old one-shots traced the trivial pair and returned a Report — keep that
+    for existing callers.  ``dim2`` is seq (forward) or max_len (decode)."""
+    from repro.configs import get_config
+    from repro.verify.pairs import round_layers, tp_decode_pair, tp_forward_pair
 
+    from .verifier import verify_graphs
 
-def _shard_dim(spec, axis: str = "model") -> Optional[int]:
-    dim = None
-    for d, entry in enumerate(tuple(spec)):
-        names = entry if isinstance(entry, tuple) else (entry,)
-        if axis in [n for n in names if n]:
-            dim = d
-    return dim
-
-
-def _spec_input_facts(flat_specs) -> list[InputFact]:
-    facts = []
-    for i, spec in enumerate(flat_specs):
-        dim = _shard_dim(spec)
-        facts.append(
-            InputFact(SHARD if dim is not None else DUP, i, i,
-                      -1 if dim is None else dim))
-    return facts
-
-
-def _forward_pair(arch: str, cfg, tp: int, batch: int, seq: int):
-    """Trace the (baseline, per-device) forward pair for ``cfg``."""
-    mesh = abstract_mesh((tp,), ("model",))
-    ctx = ParallelCtx(tp_axis="model", tp_size=tp, ep_axis="model", ep_size=tp)
-    model_s = Model(cfg, ParallelCtx.single(), moe_impl="dense")
-    model_d = Model(cfg, ctx, moe_impl="dense")
-
-    key = jax.random.PRNGKey(0)
-    param_shapes = jax.eval_shape(model_s.init, key)
-    pspecs = _verify_pspecs(param_shapes, cfg)
-    b = {}
-    if cfg.frontend == "vision_patches":
-        seq = max(seq, cfg.frontend_len + 32)
-        b["vision_embeds"] = jax.ShapeDtypeStruct(
-            (batch, cfg.frontend_len, cfg.frontend_dim), model_s.dtype)
-        b["tokens"] = jax.ShapeDtypeStruct((batch, seq - cfg.frontend_len), jnp.int32)
-    elif cfg.frontend == "audio_frames":
-        b["frames"] = jax.ShapeDtypeStruct((batch, seq, cfg.d_model), model_s.dtype)
-    else:
-        b["tokens"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
-    bspecs = jax.tree_util.tree_map(lambda _: P(), b)
-
-    base_fn = lambda p, bb: model_s.forward(p, bb, unroll=True)
-    dist_fn = lambda p, bb: model_d.forward(p, bb, unroll=True)
-
-    gb, b_in, _ = trace(base_fn, param_shapes, b, name=f"{arch}-base")
-    gd, d_in, _ = trace_sharded(
-        dist_fn, mesh, (pspecs, bspecs), P(None, None, "model"),
-        param_shapes, b, name=f"{arch}-dist")
-    flat_specs = jax.tree_util.tree_leaves(
-        (pspecs, bspecs), is_leaf=lambda x: isinstance(x, P))
-    return gb, b_in, gd, d_in, flat_specs
-
-
-def _stamped_pair(cfg, pair_fn, periods_per_block: int):
-    """Trace only TRACE_PERIODS block periods and stamp the rest, or None.
-
-    ``periods_per_block``: layer tags per period region (block_period for
-    forward traces whose periods span P layer scopes; 1 for decode traces
-    whose period is one outer block scope).
-    """
-    total = cfg.n_layers // cfg.block_period
-    if total <= TRACE_PERIODS:
-        return None
-    cfg_t = dataclasses.replace(
-        cfg, n_layers=TRACE_PERIODS * cfg.block_period)
-    gb, b_in, gd, d_in, flat_specs = pair_fn(cfg_t)
-    stride = LAYER_TAG_STRIDE * periods_per_block
-    sb = stamp_graph(gb, total, lambda t: t // stride)
-    if sb is None:
-        return None
-    sd = stamp_graph(gd, total, lambda t: t // stride)
-    if sd is None:
-        return None
-    return sb, b_in, sd, d_in, flat_specs
+    options = options or VerifyOptions()
+    cfg = round_layers(get_config(arch, smoke=smoke), n_layers)
+    build = tp_decode_pair if decode else tp_forward_pair
+    pair = build(arch, cfg, 1, batch, dim2, stamp=options.stamp)
+    dist = pair.dist
+    if mutate_dist is not None:
+        dist = mutate_dist(dist)
+        dist.stamp = None
+    return verify_graphs(
+        pair.base, dist, size=1,
+        input_facts=pair.input_facts,
+        base_inputs=pair.base_inputs, dist_inputs=pair.dist_inputs,
+        output_specs=pair.output_specs, options=options)
 
 
 def verify_model_tp(
@@ -161,55 +61,22 @@ def verify_model_tp(
     options: Optional[VerifyOptions] = None,
     mutate_dist=None,
 ) -> Report:
-    options = options or VerifyOptions()
-    cfg = _round_layers(get_config(arch, smoke=smoke), n_layers)
+    """Deprecated: use ``Session().verify(arch, Plan(tp=...))``."""
+    warnings.warn(
+        "verify_model_tp is deprecated; use repro.verify.Session with "
+        "Plan(tp=...)", DeprecationWarning, stacklevel=2)
+    if tp <= 1:
+        return _tp1_report(arch, decode=False, smoke=smoke, batch=batch,
+                           dim2=seq, n_layers=n_layers, options=options,
+                           mutate_dist=mutate_dist)
+    from repro.verify import Plan
 
-    pair_fn = lambda c: _forward_pair(arch, c, tp, batch, seq)
-    pair = _stamped_pair(cfg, pair_fn, cfg.block_period) if options.stamp else None
-    if pair is None:
-        pair = pair_fn(cfg)
-    gb, b_in, gd, d_in, flat_specs = pair
-    if mutate_dist is not None:
-        gd = mutate_dist(gd)
-        gd.stamp = None  # surgery invalidates periodicity metadata
-
-    # input relation registration straight from the sharding rules
-    facts = _spec_input_facts(flat_specs)
-    return verify_graphs(
-        gb, gd, size=tp, input_facts=facts, base_inputs=b_in, dist_inputs=d_in,
-        output_specs=[OutputSpec(kind="shard", dim=2)],
-        options=options,
-    )
-
-
-def _decode_pair(arch: str, cfg, tp: int, batch: int, max_len: int):
-    """Trace the (baseline, per-device) decode-step pair for ``cfg``."""
-    from repro.parallel.sharding import cache_specs as _cache_specs
-
-    mesh = abstract_mesh((tp,), ("model",))
-    ctx = ParallelCtx(tp_axis="model", tp_size=tp, ep_axis="model", ep_size=tp)
-    model_s = Model(cfg, ParallelCtx.single(), moe_impl="dense")
-    model_d = Model(cfg, ctx, moe_impl="dense")
-
-    key = jax.random.PRNGKey(0)
-    param_shapes = jax.eval_shape(model_s.init, key)
-    pspecs = _verify_pspecs(param_shapes, cfg)
-    cache_shapes = jax.eval_shape(lambda: model_s.init_cache(batch, max_len))
-    cspecs = _cache_specs(cache_shapes, None)
-    tok = jax.ShapeDtypeStruct((batch,), jnp.int32)
-    pos = jax.ShapeDtypeStruct((), jnp.int32)
-
-    base_fn = lambda p, t, c, q: model_s.decode_step(p, t, c, q, unroll=True)
-    dist_fn = lambda p, t, c, q: model_d.decode_step(p, t, c, q, unroll=True)
-    gb, b_in, _ = trace(base_fn, param_shapes, tok, cache_shapes, pos,
-                        name=f"{arch}-decode-base")
-    gd, d_in, _ = trace_sharded(
-        dist_fn, mesh, (pspecs, P(), cspecs, P()),
-        (P(None, "model"), jax.tree_util.tree_map(lambda s: s, cspecs)),
-        param_shapes, tok, cache_shapes, pos, name=f"{arch}-decode-dist")
-    flat_specs = jax.tree_util.tree_leaves(
-        (pspecs, P(), cspecs, P()), is_leaf=lambda x: isinstance(x, P))
-    return gb, b_in, gd, d_in, (flat_specs, cspecs)
+    with _session(options) as s:
+        return s.verify(
+            arch,
+            Plan(tp=tp, layers=n_layers, batch=batch, seq=seq, smoke=smoke),
+            mutate_dist=mutate_dist,
+        )
 
 
 def verify_decode_tp(
@@ -223,34 +90,48 @@ def verify_decode_tp(
     options: Optional[VerifyOptions] = None,
     mutate_dist=None,
 ) -> Report:
-    """Verify the TP parallelization of the *serving* step (the paper's own
-    setting is inference graphs): one token against KV/SSM caches sharded
-    over heads, vocab-parallel head output."""
-    options = options or VerifyOptions()
-    cfg = _round_layers(get_config(arch, smoke=smoke), n_layers)
-    if cfg.encoder_only:
-        raise ValueError(f"{arch} is encoder-only: no decode step")
+    """Deprecated: use ``Session().verify(arch, Plan.decode(tp=...))``."""
+    warnings.warn(
+        "verify_decode_tp is deprecated; use repro.verify.Session with "
+        "Plan.decode(tp=...)", DeprecationWarning, stacklevel=2)
+    if tp <= 1:
+        return _tp1_report(arch, decode=True, smoke=smoke, batch=batch,
+                           dim2=max_len, n_layers=n_layers, options=options,
+                           mutate_dist=mutate_dist)
+    from repro.verify import Plan, PlanError
 
-    # one decode period = one outer block scope (P sub-layers)
-    pair_fn = lambda c: _decode_pair(arch, c, tp, batch, max_len)
-    pair = _stamped_pair(cfg, pair_fn, 1) if options.stamp else None
-    if pair is None:
-        pair = pair_fn(cfg)
-    gb, b_in, gd, d_in, (flat_specs, cspecs) = pair
-    if mutate_dist is not None:
-        gd = mutate_dist(gd)
-        gd.stamp = None
+    with _session(options) as s:
+        try:
+            return s.verify(
+                arch,
+                Plan.decode(tp=tp, layers=n_layers, batch=batch,
+                            max_len=max_len, smoke=smoke),
+                mutate_dist=mutate_dist,
+            )
+        except PlanError as e:
+            raise ValueError(str(e)) from e
 
-    facts = _spec_input_facts(flat_specs)
 
-    # outputs: logits sharded over vocab (dim 1) + every cache leaf sharded
-    # on its head dim (matching the input cache specs)
-    out_specs = [OutputSpec(kind="shard", dim=1)]
-    for spec in jax.tree_util.tree_leaves(cspecs, is_leaf=lambda x: isinstance(x, P)):
-        dim = _shard_dim(spec)
-        out_specs.append(OutputSpec(kind="shard" if dim is not None else "dup",
-                                    dim=-1 if dim is None else dim))
-    return verify_graphs(
-        gb, gd, size=tp, input_facts=facts, base_inputs=b_in, dist_inputs=d_in,
-        output_specs=out_specs, options=options,
-    )
+def __getattr__(name: str):
+    # legacy private helpers, re-homed in repro.verify (kept importable for
+    # one deprecation cycle)
+    from repro.verify import pairs as _pairs
+    from repro.verify import specs as _specs
+
+    legacy = {
+        "_forward_pair": _pairs._tp_forward_parts,
+        "_decode_pair": _pairs._tp_decode_parts,
+        "_verify_pspecs": _pairs.verify_pspecs,
+        "_round_layers": _pairs.round_layers,
+        "_shard_dim": _specs.shard_dim,
+        "_spec_input_facts": _specs.spec_input_facts,
+    }
+    if name == "_stamped_pair":
+        def _stamped_pair(cfg, pair_fn, periods_per_block):
+            parts, _ = _pairs._stamped_parts(cfg, pair_fn, periods_per_block)
+            return parts
+
+        return _stamped_pair
+    if name in legacy:
+        return legacy[name]
+    raise AttributeError(name)

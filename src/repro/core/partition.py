@@ -21,7 +21,7 @@ never re-dispatches the layer's nodes.
 from __future__ import annotations
 
 import concurrent.futures as _fut
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Optional, Sequence
 
 from .ir import Graph
@@ -107,10 +107,27 @@ class MemoStats:
     layers: int = 0
     memo_hits: int = 0
     facts_replayed: int = 0
-    # stamped-graph fast path: fingerprints/ext-input lists served from the
-    # template cache, and dist nodes settled without a cleanup re-dispatch
+    # template fast path: fingerprints/ext-input lists served from a cache
+    # (stamped periods within a run, every layer on a warm Session re-verify),
+    # and dist nodes settled without a cleanup re-dispatch
     fp_cached: int = 0
     settled_nodes: int = 0
+
+
+@dataclass
+class TemplateCache:
+    """Cross-run template cache owned by a :class:`repro.verify.Session`.
+
+    Valid ONLY for re-verification of the *identical* graph pair (the
+    session keys it together with its trace cache): ``memo`` holds the
+    per-layer fact templates, ``tpl`` the stamped-period structure cache,
+    and ``struct`` the per-layer structural parts keyed by plan key —
+    ``plan.key -> (base_fp, dist_fp, slice_delta, base_ext, dist_ext)`` —
+    so a warm re-verify never re-fingerprints a layer."""
+
+    memo: dict = field(default_factory=dict)
+    tpl: dict = field(default_factory=dict)
+    struct: dict = field(default_factory=dict)
 
 
 class PartitionedVerifier:
@@ -118,17 +135,20 @@ class PartitionedVerifier:
     rewriting, memoized replay for repeated layers."""
 
     def __init__(self, prop: Propagator, parallel_workers: int = 0, memoize: bool = True,
-                 engine=None):
+                 engine=None, cache: Optional[TemplateCache] = None):
         self.prop = prop
         self.workers = parallel_workers
         self.memoize = memoize
         self.engine = engine  # WorklistEngine: semi-naive per-layer rewriting
         self.stats = MemoStats()
         # memo: fingerprint -> (base_nodes, dist_nodes, base_ext, [fact templates])
-        self._memo: dict[tuple, tuple] = {}
+        self._memo: dict[tuple, tuple] = cache.memo if cache else {}
         # stamped fast path: template tag -> (b_struct, d_struct, delta,
         #                                     base_ext, dist_ext)
-        self._tpl_cache: dict[int, tuple] = {}
+        self._tpl_cache: dict[int, tuple] = cache.tpl if cache else {}
+        # cross-run structural parts (warm Session re-verify of the SAME
+        # graph pair); None disables the lookup so cold runs are unchanged
+        self._struct_cache: Optional[dict] = cache.struct if cache else None
 
     # -- signatures -----------------------------------------------------------
     def _ext_inputs(self, g: Graph, nids: Sequence[int]) -> list[int]:
@@ -155,8 +175,14 @@ class PartitionedVerifier:
         return p
 
     def _plan_ext(self, plan: LayerPlan) -> tuple[list[int], list[int]]:
-        """(base_ext, dist_ext) — from the template cache for stamped
-        periods (O(boundary)), computed exactly otherwise (O(layer))."""
+        """(base_ext, dist_ext) — from the session struct cache on a warm
+        re-verify or the stamped template cache (O(boundary)), computed
+        exactly otherwise (O(layer))."""
+        if self._struct_cache is not None:
+            hit = self._struct_cache.get(plan.key)
+            if hit is not None:
+                self.stats.fp_cached += 1
+                return hit[3], hit[4]
         p = self._stamp_period(plan.key)
         if p is not None:
             tpl = self._tpl_cache.get(self.prop.base.stamp.template_tag(plan.key))
@@ -189,6 +215,10 @@ class PartitionedVerifier:
         """(base_fp, dist_fp, slice-offset delta) — cached for stamped
         periods: clones share the template's structure, and their base/dist
         slice offsets advance in lockstep so the *delta* is invariant."""
+        if self._struct_cache is not None:
+            hit = self._struct_cache.get(plan.key)
+            if hit is not None:
+                return hit[0], hit[1], hit[2]
         p = self._stamp_period(plan.key)
         tpl_key = None
         if p is not None:
@@ -212,6 +242,8 @@ class PartitionedVerifier:
                 and isinstance(plan.key, int)
                 and sb.period_of_tag(plan.key) == sb.template_period):
             self._tpl_cache[plan.key] = (b_fp, d_fp, delta, ext[0], ext[1])
+        if self._struct_cache is not None:
+            self._struct_cache[plan.key] = (b_fp, d_fp, delta, ext[0], ext[1])
         return b_fp, d_fp, delta
 
     def _fingerprint(self, plan: LayerPlan,

@@ -1,0 +1,232 @@
+"""Structured verification reports (the ``repro.verify`` result surface).
+
+One :class:`Report` class serves both API generations: the legacy entry
+points (``verify_graphs``/``verify_sharded``/``verify_model_tp``/...) return
+it with the original fields populated, and the :class:`repro.verify.Session`
+additionally fills the redesigned surface — severity-ranked
+:class:`BugSite`\\ s, per-phase :class:`PhaseTimings`, :class:`CacheStats`
+proving template reuse across warm calls, per-scenario sub-results for
+multi-axis plans, and a stable ``to_json()``/``from_json()`` round trip
+(schema-versioned so CI and downstream tools can consume verdicts
+machine-readably).
+"""
+from __future__ import annotations
+
+import json
+from dataclasses import asdict, dataclass, field
+from typing import Optional
+
+from .partition import MemoStats
+from .relations import Diagnostic
+
+JSON_SCHEMA_VERSION = 1
+
+# bug-category severity: how likely the finding is a real silent error
+# (paper §7.3 categories).  Unlisted categories default to "medium".
+SEVERITY = {
+    "missing_all_reduce": "high",
+    "redundant_all_reduce": "high",
+    "wrong_replica_groups": "high",
+    "wrong_axis_split": "high",
+    "layout_mismatch": "high",
+    "precision_mismatch": "medium",
+    "unverified_frontier": "low",
+}
+_SEVERITY_ORDER = {"high": 0, "medium": 1, "low": 2}
+
+
+def severity_of(category: str) -> str:
+    return SEVERITY.get(category, "medium")
+
+
+@dataclass
+class BugSite:
+    src: str
+    op: str
+    node: int
+    category: str
+    detail: str
+    repair: Optional[list] = None
+    severity: str = ""  # derived from category when not set
+
+    def __post_init__(self) -> None:
+        if not self.severity:
+            self.severity = severity_of(self.category)
+
+    @property
+    def rank(self) -> int:
+        return _SEVERITY_ORDER.get(self.severity, 1)
+
+
+def rank_bug_sites(sites: list) -> list:
+    """Severity-ranked order (stable within a severity class)."""
+    return sorted(sites, key=lambda b: b.rank)
+
+
+@dataclass
+class PhaseTimings:
+    """Wall-clock breakdown of one verification call (seconds)."""
+
+    trace_s: float = 0.0  # jax tracing -> TensorIR (0 on a graph-cache hit)
+    stamp_s: float = 0.0  # periodicity validation + IR cloning
+    rules_s: float = 0.0  # partitioning + rule evaluation to fixpoint
+    localize_s: float = 0.0  # output checks + bug localization
+
+    @property
+    def total_s(self) -> float:
+        return self.trace_s + self.stamp_s + self.rules_s + self.localize_s
+
+
+@dataclass
+class CacheStats:
+    """Session-level cache effectiveness for one verification call.
+
+    ``trace_cached`` proves the graph pair was served from the session's
+    trace cache (no re-tracing); ``fp_cached`` counts layer fingerprints and
+    boundary-input lists served from a template cache (stamped periods
+    within a run, every layer on a warm re-verify); the remaining counters
+    mirror :class:`~repro.core.partition.MemoStats`."""
+
+    trace_cached: bool = False
+    fp_cached: int = 0
+    memo_hits: int = 0
+    facts_replayed: int = 0
+    settled_nodes: int = 0
+
+    @classmethod
+    def from_memo(cls, memo: Optional[MemoStats],
+                  trace_cached: bool = False) -> "CacheStats":
+        if memo is None:
+            return cls(trace_cached=trace_cached)
+        return cls(
+            trace_cached=trace_cached,
+            fp_cached=memo.fp_cached,
+            memo_hits=memo.memo_hits,
+            facts_replayed=memo.facts_replayed,
+            settled_nodes=memo.settled_nodes,
+        )
+
+
+@dataclass
+class Report:
+    verified: bool
+    outputs_ok: list
+    bug_sites: list
+    diagnostics: list
+    num_facts: int
+    num_base_nodes: int
+    num_dist_nodes: int
+    elapsed_s: float
+    memo: Optional[MemoStats] = None
+    unverified_count: int = 0
+    rule_invocations: int = 0
+    # ---- redesigned surface (populated by repro.verify.Session) ----
+    arch: str = ""
+    plan: Optional[dict] = None  # Plan.to_dict() of the requested plan
+    timings: PhaseTimings = field(default_factory=PhaseTimings)
+    cache: CacheStats = field(default_factory=CacheStats)
+    # per-scenario sub-results for multi-axis plans: list of dicts with
+    # {"scenario", "axis", "size", "verified", "num_facts", ...}
+    scenarios: list = field(default_factory=list)
+
+    def summary(self) -> str:
+        head = f"{'VERIFIED' if self.verified else 'UNVERIFIED'}"
+        if self.arch:
+            head += f" {self.arch}"
+            if self.plan:
+                head += f" [{_plan_label(self.plan)}]"
+        lines = [
+            f"{head}: "
+            f"{self.num_base_nodes}/{self.num_dist_nodes} nodes (base/dist), "
+            f"{self.num_facts} facts, {self.elapsed_s*1e3:.1f} ms"
+        ]
+        if self.memo:
+            lines.append(
+                f"  layers={self.memo.layers} memo_hits={self.memo.memo_hits} "
+                f"replayed={self.memo.facts_replayed}"
+            )
+        if self.cache.trace_cached or self.cache.fp_cached:
+            lines.append(
+                f"  cache: trace={'warm' if self.cache.trace_cached else 'cold'} "
+                f"fp_cached={self.cache.fp_cached}"
+            )
+        for s in self.scenarios:
+            lines.append(
+                f"  [{s['scenario']}] {'ok' if s['verified'] else 'FAILED'} "
+                f"axis={s['axis']} size={s['size']} facts={s['num_facts']}"
+            )
+        for b in self.bug_sites[:10]:
+            lines.append(
+                f"  BUG? [{b.severity}/{b.category}] {b.op} at "
+                f"{b.src or '<unknown>'}: {b.detail}"
+            )
+            if b.repair:
+                lines.append(f"        suggested repair bijection: {b.repair}")
+        return "\n".join(lines)
+
+    # ------------------------------------------------------------- JSON
+    def to_json(self, indent: Optional[int] = None) -> str:
+        d = {
+            "schema": JSON_SCHEMA_VERSION,
+            "verified": self.verified,
+            "arch": self.arch,
+            "plan": self.plan,
+            "outputs_ok": [bool(x) for x in self.outputs_ok],
+            "num_facts": self.num_facts,
+            "num_base_nodes": self.num_base_nodes,
+            "num_dist_nodes": self.num_dist_nodes,
+            "elapsed_s": self.elapsed_s,
+            "unverified_count": self.unverified_count,
+            "rule_invocations": self.rule_invocations,
+            "memo": asdict(self.memo) if self.memo else None,
+            "timings": asdict(self.timings),
+            "cache": asdict(self.cache),
+            "scenarios": list(self.scenarios),
+            "bug_sites": [asdict(b) for b in self.bug_sites],
+            "diagnostics": [
+                {"dist": g.dist, "category": g.category, "detail": g.detail,
+                 "repair": g.repair}
+                for g in self.diagnostics
+            ],
+        }
+        return json.dumps(d, indent=indent, sort_keys=True)
+
+    @classmethod
+    def from_json(cls, s: str) -> "Report":
+        d = json.loads(s)
+        if d.get("schema") != JSON_SCHEMA_VERSION:
+            raise ValueError(
+                f"unsupported report schema {d.get('schema')!r} "
+                f"(expected {JSON_SCHEMA_VERSION})"
+            )
+        return cls(
+            verified=d["verified"],
+            outputs_ok=list(d["outputs_ok"]),
+            bug_sites=[BugSite(**b) for b in d["bug_sites"]],
+            diagnostics=[Diagnostic(**g) for g in d["diagnostics"]],
+            num_facts=d["num_facts"],
+            num_base_nodes=d["num_base_nodes"],
+            num_dist_nodes=d["num_dist_nodes"],
+            elapsed_s=d["elapsed_s"],
+            memo=MemoStats(**d["memo"]) if d.get("memo") else None,
+            unverified_count=d["unverified_count"],
+            rule_invocations=d["rule_invocations"],
+            arch=d.get("arch", ""),
+            plan=d.get("plan"),
+            timings=PhaseTimings(**d.get("timings", {})),
+            cache=CacheStats(**d.get("cache", {})),
+            scenarios=list(d.get("scenarios", [])),
+        )
+
+
+def _plan_label(plan: dict) -> str:
+    parts = []
+    if plan.get("tp", 1) > 1:
+        parts.append(f"tp{plan['tp']}")
+    if plan.get("dp", 1) > 1:
+        parts.append(f"dp{plan['dp']}")
+    mode = plan.get("mode", "forward")
+    if plan.get("stages", 1) > 1:
+        parts.append(f"pp{plan['stages']}")
+    label = "+".join(parts) or "single"
+    return f"{label}-{mode}"

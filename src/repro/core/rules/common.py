@@ -42,3 +42,17 @@ def dup_id(f: Fact) -> bool:
     """Dup fact whose layout is identity up to unit-dim bookkeeping."""
     return (f.layout.effectively_identity
             and f.layout.src_shape == f.layout.dst_shape)
+
+
+# ops that preserve all-zero-ness when walking back to a const leaf
+_ZERO_CHAIN_OPS = frozenset({"broadcast", "reshape", "copy", "transpose", "convert"})
+
+
+def is_zero_const(g, nid: int) -> bool:
+    """True when ``nid`` is (a broadcast/reshape/transpose/copy chain over) a
+    constant whose payload is all zeros — the additive identity that makes
+    scatter-add accumulation and zero-padding distribute over partial sums."""
+    n = g[nid]
+    while n.op in _ZERO_CHAIN_OPS and n.inputs:
+        n = g[n.inputs[0]]
+    return n.op == "const" and bool(n.param("zero"))

@@ -17,7 +17,7 @@ from .registry import DEFAULT_REGISTRY as R
 # congruence pass fires first, as the monolithic handlers did)
 GENERIC_EXTRA_OPS = (
     "pad", "cumsum", "rev", "dynamic_slice", "dynamic_update_slice", "concat",
-    "gather", "scatter",
+    "gather", "scatter", "scatter_add",
 )
 
 # leaves and pure-routing ops fire no rules

@@ -105,9 +105,10 @@ class _ShardStore:
 
 
 class WorklistEngine:
-    def __init__(self, prop, workers: int = 0) -> None:
+    def __init__(self, prop, workers: int = 0, pool=None) -> None:
         self.prop = prop
         self.workers = int(workers or 0)
+        self._ext_pool = pool  # session-owned: survives close()
         self._consumers = prop.dist.consumer_index()
         # nodes to (re)visit outside the active run, kind-tagged
         self.pending: dict[int, set[str]] = {}
@@ -125,9 +126,9 @@ class WorklistEngine:
         return self.prop.rule_invocations
 
     def close(self) -> None:
-        if self._pool is not None:
+        if self._pool is not None and self._pool is not self._ext_pool:
             self._pool.shutdown(wait=True)
-            self._pool = None
+        self._pool = None
 
     # ------------------------------------------------------------ listeners
     def _on_facts(self, facts: Iterable[Fact]) -> None:
@@ -224,7 +225,8 @@ class WorklistEngine:
         from ...core.partition import stage_topologies, topological_stages
 
         if self._pool is None:
-            self._pool = _fut.ThreadPoolExecutor(max_workers=self.workers)
+            self._pool = self._ext_pool or _fut.ThreadPoolExecutor(
+                max_workers=self.workers)
         prop, dist = self.prop, self.prop.dist
         prop.prewarm_shared()
         store = prop.store

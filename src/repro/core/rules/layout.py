@@ -8,7 +8,7 @@ from dataclasses import replace
 from ..bijection import Layout, NotSplitMerge
 from ..ir import Node
 from ..relations import DUP, LOOPRED, PARTIAL, SHARD, SLICEGRP, Fact
-from .common import shard_stack_layout
+from .common import is_zero_const, shard_stack_layout
 from .registry import DEFAULT_REGISTRY as R
 
 
@@ -118,8 +118,22 @@ def broadcast(prop, d: Node) -> None:
 def pad(prop, d: Node) -> None:
     """pad: dup via congruence (the generic rule); shard preserved when the
     sharded dim is not padded (same padding config on the baseline
-    candidate)."""
+    candidate); partial(add) carries through zero-padding (padding with the
+    additive identity distributes over the rank sum — cotangents of sliced
+    stacked parameters under data parallelism)."""
     pc = d.param("padding_config")
+    if len(d.inputs) > 1 and is_zero_const(prop.dist, d.inputs[1]):
+        for f in prop.store.facts_kind(d.inputs[0], PARTIAL):
+            if f.reduce_op != "add" or not (f.layout.effectively_identity
+                                            and f.layout.src_shape == f.layout.dst_shape):
+                continue
+            for vf in prop.store.facts_kind(d.inputs[1], DUP)[:4]:
+                for z in prop._base_candidates(
+                        d.op, [f.base, vf.base], d.params, layer=d.layer):
+                    if prop._dtype_ok(z, d):
+                        prop.emit(Fact(PARTIAL, z.id, d.id, prop.size,
+                                       Layout.identity(z.shape),
+                                       reduce_op="add"))
     for f in prop.store.facts_kind(d.inputs[0], SHARD):
         k = prop._shard_src_dim(f)
         if k is None:

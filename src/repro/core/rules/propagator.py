@@ -266,7 +266,10 @@ class Propagator:
 
     # ----------------------------------------------------------- diagnostics
     def _diag_layout(self, d: Node, combo: Sequence[Fact]) -> None:
-        f0, f1 = combo[0], combo[1]
+        if not combo:
+            return
+        f0 = combo[0]
+        f1 = combo[1] if len(combo) > 1 else f0
         repair = None
         try:
             repair = infer_bijection(f0.layout, f1.layout)

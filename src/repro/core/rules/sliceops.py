@@ -5,11 +5,12 @@ dynamic slicing carries clean shards through replicated indices."""
 from __future__ import annotations
 
 import itertools
+import re
 
 from ..bijection import Layout, NotSplitMerge
 from ..ir import Node
 from ..relations import DUP, LOOPRED, PARTIAL, SHARD, SLICEGRP, Fact
-from .common import dup_id, shard_stack_layout
+from .common import dup_id, is_zero_const, shard_stack_layout
 from .congruence import generic
 from .registry import DEFAULT_REGISTRY as R
 
@@ -178,3 +179,88 @@ def dynamic_sliceish(prop, d: Node) -> None:
             except NotSplitMerge:
                 continue
             prop.emit(Fact(SHARD, z.id, d.id, prop.size, lay))
+
+
+def _gather_dims(dn: str, name: str) -> tuple:
+    """Parse one tuple field out of the stringified GatherDimensionNumbers
+    (trace.py stores ``str(dimension_numbers)`` because the object itself is
+    not comparable across jax versions)."""
+    m = re.search(name + r"=\((.*?)\)", dn)
+    if not m:
+        return ()
+    return tuple(int(x) for x in m.group(1).replace(" ", "").split(",") if x)
+
+
+@R.rule("gather_batch", ("gather",), consumes=(DUP, SHARD))
+def gather_batch(prop, d: Node) -> None:
+    """gather with a replicated operand and a *batch* dim of the indices
+    sharded: each rank looks up its own rows of the same table, so the shard
+    relation carries to the matching output batch dim.  This is the
+    embedding lookup under data parallelism (tokens batch-sharded, table
+    replicated)."""
+    if len(d.inputs) != 2:
+        return
+    op_in, idx_in = d.inputs
+    dn = str(d.param("dimension_numbers") or "")
+    if (_gather_dims(dn, "operand_batching_dims")
+            or _gather_dims(dn, "start_indices_batching_dims")):
+        return
+    offset = set(_gather_dims(dn, "offset_dims"))
+    batch_out = [i for i in range(len(d.shape)) if i not in offset]
+    # indices dims: leading batch dims + trailing index-vector dim
+    idx_ndim = len(prop.dist[idx_in].shape)
+    for fo in prop.store.facts_kind(op_in, DUP):
+        if not dup_id(fo):
+            continue
+        for fi in prop.store.facts_kind(idx_in, SHARD):
+            k = prop._shard_src_dim(fi)
+            if k is None or k >= idx_ndim - 1 or k >= len(batch_out):
+                continue
+            out_dim = batch_out[k]
+            for z in prop._base_candidates("gather", [fo.base, fi.base],
+                                           d.params, layer=d.layer):
+                if not prop._dtype_ok(z, d):
+                    continue
+                try:
+                    lay = shard_stack_layout(z.shape, out_dim, prop.size)
+                except NotSplitMerge:
+                    continue
+                prop.emit(Fact(SHARD, z.id, d.id, prop.size, lay))
+
+
+@R.rule("scatter_add_partial", ("scatter_add",), consumes=(DUP, SHARD))
+def scatter_add_partial(prop, d: Node) -> None:
+    """scatter-add onto an all-zero operand with the scatter batch dim of
+    the indices and updates sharded: each rank accumulates its own rows onto
+    the same zero base, and add-scatter is linear in the (index, update)
+    rows, so the rank-sum equals the full scatter — a ``partial(add)`` fact.
+    This is the embedding-table gradient under data parallelism."""
+    if len(d.inputs) != 3:
+        return
+    op_in, idx_in, upd_in = d.inputs
+    if not is_zero_const(prop.dist, op_in):
+        return
+    dn = str(d.param("dimension_numbers") or "")
+    if (_gather_dims(dn, "operand_batching_dims")
+            or _gather_dims(dn, "scatter_indices_batching_dims")):
+        return
+    window = set(_gather_dims(dn, "update_window_dims"))
+    upd_batch = [i for i in range(len(prop.dist[upd_in].shape)) if i not in window]
+    idx_ndim = len(prop.dist[idx_in].shape)
+    for fo in prop.store.facts_kind(op_in, DUP):
+        if not dup_id(fo):
+            continue
+        for fi in prop.store.facts_kind(idx_in, SHARD):
+            k = prop._shard_src_dim(fi)
+            if k is None or k >= idx_ndim - 1 or k >= len(upd_batch):
+                continue
+            for fu in prop.store.facts_kind(upd_in, SHARD):
+                if prop._shard_src_dim(fu) != upd_batch[k]:
+                    continue
+                for z in prop._base_candidates(
+                        "scatter_add", [fo.base, fi.base, fu.base], d.params,
+                        layer=d.layer):
+                    if prop._dtype_ok(z, d):
+                        prop.emit(Fact(PARTIAL, z.id, d.id, prop.size,
+                                       Layout.identity(z.shape),
+                                       reduce_op="add"))

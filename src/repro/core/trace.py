@@ -36,6 +36,7 @@ _PRIM_MAP = {
     "reduce_precision": "convert",
     "stop_gradient": "copy",
     "copy": "copy",
+    "add_any": "add",  # autodiff cotangent accumulation == add
     "squeeze": "reshape",
     "expand_dims": "reshape",
     "log_softmax": "log_softmax",
@@ -172,7 +173,12 @@ class Tracer:
             hit = self._const_cache.get(key)
             if hit is not None:
                 return hit
-        nid = self.g.add("const", (), shape, dtype, {"value_hash": value_hash})
+        cparams: dict[str, Any] = {"value_hash": value_hash}
+        if val is not None and not np.any(np.asarray(val)):
+            # all-zero payload: rules about additive identities (scatter-add
+            # gradient accumulation, zero-padding of partial sums) key on this
+            cparams["zero"] = True
+        nid = self.g.add("const", (), shape, dtype, cparams)
         if val is not None:
             self._record_scalar(nid, val)
         if value_hash is not None:

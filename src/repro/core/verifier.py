@@ -1,24 +1,30 @@
-"""Top-level verification API + bug localization (paper §5.3).
+"""Graph-level verification entry points + bug localization (paper §5.3).
 
 ``verify_graphs`` is the engine entry point over two TensorIR graphs;
 ``verify_sharded`` is the convenience wrapper that traces a baseline function
-and its shard_map distribution and verifies them in one call — this is what
-``repro.launch.train``/``serve`` run as a pre-flight gate.
+and its shard_map distribution and verifies them in one call.
+
+The *model-level* public API lives in :mod:`repro.verify` (``Session`` /
+``Plan`` / ``Report``): it owns the cross-call state (persistent worker
+pool, trace + template caches) and calls ``verify_graphs`` with the
+``cache``/``pool``/``timings`` hooks below.  ``repro.launch.train`` /
+``serve`` run their pre-flight gates through it.
 """
 from __future__ import annotations
 
 import time
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Optional, Sequence
 
+import jax
 from jax.sharding import AbstractMesh, PartitionSpec
 
 from repro.compat import abstract_mesh
 
-from .egraph import GraphEGraph
 from .ir import Graph, LEAF_OPS
-from .partition import MemoStats, PartitionedVerifier
+from .partition import PartitionedVerifier, TemplateCache
 from .relations import DUP, SHARD, Diagnostic, RelStore
+from .report import BugSite, CacheStats, PhaseTimings, Report, rank_bug_sites
 from .rules import Propagator, WorklistEngine
 from .trace import trace, trace_sharded
 
@@ -41,48 +47,6 @@ class OutputSpec:
 
 
 @dataclass
-class BugSite:
-    src: str
-    op: str
-    node: int
-    category: str
-    detail: str
-    repair: Optional[list] = None
-
-
-@dataclass
-class Report:
-    verified: bool
-    outputs_ok: list[bool]
-    bug_sites: list[BugSite]
-    diagnostics: list[Diagnostic]
-    num_facts: int
-    num_base_nodes: int
-    num_dist_nodes: int
-    elapsed_s: float
-    memo: Optional[MemoStats] = None
-    unverified_count: int = 0
-    rule_invocations: int = 0
-
-    def summary(self) -> str:
-        lines = [
-            f"{'VERIFIED' if self.verified else 'UNVERIFIED'}: "
-            f"{self.num_base_nodes}/{self.num_dist_nodes} nodes (base/dist), "
-            f"{self.num_facts} facts, {self.elapsed_s*1e3:.1f} ms"
-        ]
-        if self.memo:
-            lines.append(
-                f"  layers={self.memo.layers} memo_hits={self.memo.memo_hits} "
-                f"replayed={self.memo.facts_replayed}"
-            )
-        for b in self.bug_sites[:10]:
-            lines.append(f"  BUG? [{b.category}] {b.op} at {b.src or '<unknown>'}: {b.detail}")
-            if b.repair:
-                lines.append(f"        suggested repair bijection: {b.repair}")
-        return "\n".join(lines)
-
-
-@dataclass
 class VerifyOptions:
     partition: bool = True
     memoize: bool = True
@@ -98,8 +62,8 @@ class VerifyOptions:
     engine: str = "worklist"
     # layer stamping (repro.core.stamp): trace O(block_period) layers and
     # clone the rest in the IR.  Only consulted by the model-level entry
-    # points (verify_model_tp / verify_decode_tp); verify_graphs receives
-    # already-built graphs.
+    # points (repro.verify / verify_model_tp / verify_decode_tp);
+    # verify_graphs receives already-built graphs.
     stamp: bool = True
 
 
@@ -125,6 +89,22 @@ def _output_ok(store: RelStore, b_out: int, d_out: int, spec: OutputSpec, size: 
     return False
 
 
+# leaf ops whose *unverified* status does not disqualify a node from the
+# frontier: they carry no relational facts of their own (pure functions of
+# attributes), so a consumer with otherwise-verified inputs is still the
+# first explainable failure point
+_FRONTIER_LEAF_OPS = ("const", "iota", "axis_index")
+
+
+def _frontier_ready(store: RelStore, dist: Graph, n) -> bool:
+    """True when ``n`` sits on the unverified frontier: it has inputs, and
+    every input is either verified or an attribute-only leaf."""
+    return bool(n.inputs) and all(
+        store.verified(i) or dist[i].op in _FRONTIER_LEAF_OPS
+        for i in n.inputs
+    )
+
+
 def localize(base: Graph, dist: Graph, store: RelStore) -> list[BugSite]:
     """Paper §5.3: report unverified nodes whose inputs are all verified,
     joined with the diagnostics collected during rule matching."""
@@ -138,14 +118,7 @@ def localize(base: Graph, dist: Graph, store: RelStore) -> list[BugSite]:
             continue
         if n.id in store.covered_nodes or (n.scope and n.scope in store.covered_scopes):
             continue  # inside a region verified wholesale by a meta rule
-        if not all(store.verified(i) or dist[i].op in LEAF_OPS and not store.facts(i) == []
-                   for i in n.inputs):
-            if not all(store.verified(i) or not dist[i].inputs for i in n.inputs):
-                continue
-        if not n.inputs:
-            continue
-        if not all(store.verified(i) or dist[i].op in ("const", "iota", "axis_index")
-                   for i in n.inputs):
+        if not _frontier_ready(store, dist, n):
             continue
         diags = diag_by_node.get(n.id, [])
         if diags:
@@ -169,7 +142,7 @@ def localize(base: Graph, dist: Graph, store: RelStore) -> list[BugSite]:
                         f"although all of its inputs are verified",
                     )
                 )
-    return sites
+    return rank_bug_sites(sites)
 
 
 def verify_graphs(
@@ -182,13 +155,24 @@ def verify_graphs(
     dist_inputs: Sequence[int],
     output_specs: Optional[Sequence[OutputSpec]] = None,
     options: Optional[VerifyOptions] = None,
+    cache: Optional[TemplateCache] = None,
+    pool=None,
+    timings: Optional[PhaseTimings] = None,
 ) -> Report:
+    """Verify a traced graph pair.
+
+    ``cache``/``pool``/``timings`` are the :class:`repro.verify.Session`
+    hooks: a :class:`TemplateCache` valid for this exact graph pair, a
+    session-owned thread pool for the worklist engine's parallel sweep, and
+    a pre-filled :class:`PhaseTimings` (trace/stamp) this call completes
+    with the rules/localize phases."""
     t0 = time.perf_counter()
     options = options or VerifyOptions()
+    timings = timings if timings is not None else PhaseTimings()
     if options.engine not in ("worklist", "passes"):
         raise ValueError(f"unknown engine {options.engine!r}: worklist|passes")
     prop = Propagator(base, dist, size, axis=options.axis)
-    engine = (WorklistEngine(prop, workers=options.parallel_workers)
+    engine = (WorklistEngine(prop, workers=options.parallel_workers, pool=pool)
               if options.engine == "worklist" else None)
     for f in input_facts:
         b, d = base_inputs[f.base_index], dist_inputs[f.dist_index]
@@ -202,7 +186,7 @@ def verify_graphs(
     try:
         if options.partition:
             pv = PartitionedVerifier(prop, options.parallel_workers, options.memoize,
-                                     engine=engine)
+                                     engine=engine, cache=cache)
             memo = pv.run()
             if engine is not None:
                 # cross-layer cleanup: never-visited nodes plus the pending
@@ -218,6 +202,8 @@ def verify_graphs(
     finally:
         if engine is not None:
             engine.close()
+    t_rules = time.perf_counter()
+    timings.rules_s = t_rules - t0
 
     specs = list(output_specs or [OutputSpec()] * len(dist.outputs))
     outputs_ok = [
@@ -229,6 +215,7 @@ def verify_graphs(
     unverified = sum(
         1 for n in dist if n.op not in LEAF_OPS and not prop.store.verified(n.id)
     )
+    timings.localize_s = time.perf_counter() - t_rules
     return Report(
         verified=verified,
         outputs_ok=outputs_ok,
@@ -241,6 +228,8 @@ def verify_graphs(
         memo=memo,
         unverified_count=unverified,
         rule_invocations=prop.rule_invocations,
+        timings=timings,
+        cache=CacheStats.from_memo(memo),
     )
 
 
@@ -263,34 +252,23 @@ def verify_sharded(
     shards dim d along ``axis`` registers ``sharded(b_i, d_i, dim=d)``;
     a replicated spec registers ``duplicate``.
     """
+    from repro.verify.specs import spec_input_facts
+
     mesh = mesh or abstract_mesh((size,), (axis,))
     options = options or VerifyOptions(axis=axis)
     gb, b_in, _b_out = trace(base_fn, *avals, name="base")
     gd, d_in, _d_out = trace_sharded(
         dist_fn, mesh, tuple(in_specs), out_specs, *avals, name="dist"
     )
-    facts = []
-    import jax
-
     # flatten specs to leaves aligned with flattened avals
     leaves = jax.tree_util.tree_leaves(
         tuple(in_specs), is_leaf=lambda x: isinstance(x, PartitionSpec)
     )
-    for i, spec in enumerate(leaves):
-        dim = None
-        for d, entry in enumerate(tuple(spec)):
-            names = entry if isinstance(entry, tuple) else (entry,)
-            if axis in [n for n in names if n]:
-                dim = d
-        if dim is None:
-            facts.append(InputFact(DUP, i, i))
-        else:
-            facts.append(InputFact(SHARD, i, i, dim))
     return verify_graphs(
         gb,
         gd,
         size=size,
-        input_facts=facts,
+        input_facts=spec_input_facts(leaves, axis=axis),
         base_inputs=b_in,
         dist_inputs=d_in,
         output_specs=output_specs,

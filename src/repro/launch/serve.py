@@ -1,7 +1,12 @@
 """Serving driver: batched prefill/decode with the verification gate.
 
+``--verify-tp N`` runs the decode-plan pre-flight (``repro.verify``,
+``Plan.decode(tp=N)``): the serving TP parallelization is proven equivalent
+to the single-device decode step before the engine starts.
+
 Usage (CPU demo):
-  python -m repro.launch.serve --arch qwen3_4b --smoke --requests 4 --max-new 8
+  python -m repro.launch.serve --arch qwen3_4b --smoke --requests 4 --max-new 8 \
+      --verify-tp 4
 """
 from __future__ import annotations
 
@@ -27,12 +32,35 @@ def main(argv=None) -> int:
     ap.add_argument("--max-len", type=int, default=64)
     ap.add_argument("--slots", type=int, default=2)
     ap.add_argument("--seed", type=int, default=0)
+    ap.add_argument("--verify-tp", type=int, default=0,
+                    help="pre-flight: verify the decode-step TP plan at this "
+                         "degree before serving (0 = skip)")
     args = ap.parse_args(argv)
 
     cfg = get_config(args.arch, smoke=args.smoke)
     if cfg.encoder_only:
         print(f"{args.arch} is encoder-only: no decode serving")
         return 1
+
+    if args.verify_tp > 1:
+        from repro.verify import Plan, Session
+
+        plan = Plan.decode(tp=args.verify_tp, smoke=args.smoke,
+                           layers=min(cfg.n_layers, 4), max_len=args.max_len)
+        print(f"[verify] checking {args.arch} plan {plan.describe()} ...")
+        try:
+            with Session() as session:
+                rep = session.verify(args.arch, plan)
+        except ValueError as e:
+            print(f"[verify] ABORTING: plan {plan.describe()} invalid for "
+                  f"{args.arch}: {e}")
+            return 2
+        print(f"[verify] {rep.summary().splitlines()[0]}")
+        if not rep.verified:
+            print(rep.summary())
+            print("[verify] ABORTING: serving parallelization not "
+                  "semantically equivalent")
+            return 2
     model = Model(cfg)
     params = model.init(jax.random.PRNGKey(args.seed))
     eng = Engine(model, params, ServeConfig(max_len=args.max_len,

@@ -25,7 +25,6 @@ from jax.sharding import PartitionSpec as P
 
 from repro.configs import SHAPES, get_config
 from repro.configs.base import ARCH_IDS, ShapeSpec
-from repro.core.modelverify import verify_model_tp
 from repro.data import DataConfig, SyntheticLM
 from repro.launch.mesh import make_debug_mesh
 from repro.models import Model
@@ -60,16 +59,31 @@ def main(argv=None) -> int:
     cfg = get_config(args.arch, smoke=args.smoke)
 
     # ---- 1. verification gate (paper technique) ---------------------------------
-    if not args.skip_verify and args.tp > 1:
-        print(f"[verify] checking {args.arch} TP={args.tp} graph equivalence ...")
-        t0 = time.time()
-        rep = verify_model_tp(args.arch, tp=args.tp, smoke=args.smoke,
-                              n_layers=min(cfg.n_layers, 4), seq=32)
-        print(f"[verify] {rep.summary().splitlines()[0]} ({time.time()-t0:.2f}s)")
-        if not rep.verified:
-            print(rep.summary())
-            print("[verify] ABORTING: parallelization not semantically equivalent")
-            return 2
+    # Declare the launch's parallelism as a Plan and verify each axis before
+    # committing devices: TP forward equivalence, and (non-MoE archs) DP
+    # batch-shard equivalence.
+    if not args.skip_verify and (args.tp > 1 or args.dp > 1):
+        from repro.verify import Plan, PlanError, Session
+
+        dp_gate = args.dp if args.dp > 1 and cfg.n_experts == 0 else 1
+        try:
+            plan = Plan(tp=args.tp, dp=dp_gate,
+                        layers=min(cfg.n_layers, 4), seq=32, smoke=args.smoke)
+        except PlanError:
+            plan = None  # tp=1 and dp gate skipped: nothing to verify
+        if plan is not None:
+            print(f"[verify] checking {args.arch} plan {plan.describe()} "
+                  f"graph equivalence ...")
+            t0 = time.time()
+            with Session() as session:
+                rep = session.verify(args.arch, plan)
+            print(f"[verify] {rep.summary().splitlines()[0]} "
+                  f"({time.time()-t0:.2f}s)")
+            if not rep.verified:
+                print(rep.summary())
+                print("[verify] ABORTING: parallelization not semantically "
+                      "equivalent")
+                return 2
 
     # ---- 2. training ----------------------------------------------------------------
     n_dev = len(jax.devices())

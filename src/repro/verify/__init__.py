@@ -1,0 +1,47 @@
+"""repro.verify — the unified verification API.
+
+This package is the single public surface for verifying a model's
+parallelization (the Scalify technique as a *reusable gate*):
+
+    from repro.verify import Session, Plan
+
+    with Session() as s:
+        report = s.verify("llama3_8b", Plan(tp=16))       # TP forward
+        report = s.verify("llama3_8b", Plan.decode(tp=16))  # serving step
+        report = s.verify("qwen3_4b", Plan(tp=8, dp=2))   # hybrid, per axis
+        report = s.verify("qwen3_4b", Plan.grad(dp=8))    # DP gradient sync
+        report = s.verify("qwen3_4b", Plan.pipeline(stages=4))
+
+    assert report.verified, report.summary()
+    print(report.to_json())
+
+The :class:`Session` owns cross-call state (trace + template caches, a
+persistent worker pool), so sweeps and re-verifies are warm-start:
+``report.cache`` proves template reuse (``trace_cached``/``fp_cached``).
+One-shots: :func:`verify`.  CLI: ``python -m repro.verify <arch> --tp 16``.
+
+The legacy entry points (``repro.core.verify_model_tp`` /
+``verify_decode_tp``) are deprecation shims over this package;
+``repro.core.verify_graphs`` / ``verify_sharded`` remain the graph-level
+engine API underneath.
+"""
+from repro.core.report import (
+    BugSite,
+    CacheStats,
+    PhaseTimings,
+    Report,
+    severity_of,
+)
+from repro.core.verifier import VerifyOptions
+
+from .plan import Plan, PlanError, Scenario
+from .session import Session, verify
+from .specs import shard_dim, spec_input_facts, spec_output_specs
+
+__all__ = [
+    "BugSite", "CacheStats", "PhaseTimings", "Report", "severity_of",
+    "VerifyOptions",
+    "Plan", "PlanError", "Scenario",
+    "Session", "verify",
+    "shard_dim", "spec_input_facts", "spec_output_specs",
+]

@@ -1,0 +1,7 @@
+"""``python -m repro.verify`` — the CLI verification gate."""
+import sys
+
+from .cli import main
+
+if __name__ == "__main__":
+    sys.exit(main())

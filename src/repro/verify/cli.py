@@ -1,0 +1,157 @@
+"""Command-line verification gate.
+
+    python -m repro.verify <arch> --tp 16 [--decode | --grad | --pipeline K]
+                           [--dp N] [--layers N] [--json out.json|-]
+
+Exit codes (stable contract for CI and launcher scripts):
+
+    0  plan verified
+    1  plan NOT verified (bug sites in the report)
+    2  usage error (unknown arch, invalid plan, bad flags)
+"""
+from __future__ import annotations
+
+import argparse
+import sys
+from typing import Optional
+
+from repro.configs.base import ARCH_IDS, EXTRA_IDS
+
+from .plan import Plan, PlanError
+from .session import Session
+
+EXIT_VERIFIED = 0
+EXIT_UNVERIFIED = 1
+EXIT_USAGE = 2
+
+
+class _Parser(argparse.ArgumentParser):
+    def error(self, message: str):  # argparse default exits 2 — keep that
+        self.print_usage(sys.stderr)
+        raise SystemExit(EXIT_USAGE)
+
+
+def build_parser() -> argparse.ArgumentParser:
+    ap = _Parser(
+        prog="python -m repro.verify",
+        description="Verify a model's parallelization plan "
+                    "(graph equivalence, paper-style).")
+    ap.add_argument("arch", help="architecture id (repro.configs)")
+    ap.add_argument("--tp", type=int, default=None, help="tensor-parallel degree")
+    ap.add_argument("--dp", type=int, default=1, help="data-parallel degree")
+    mode = ap.add_mutually_exclusive_group()
+    mode.add_argument("--decode", action="store_true",
+                      help="verify the serving decode step (tp axis)")
+    mode.add_argument("--grad", action="store_true",
+                      help="verify DP gradient sync (dp axis)")
+    mode.add_argument("--pipeline", type=int, metavar="STAGES", default=0,
+                      help="verify each pipeline stage (per-stage tp)")
+    ap.add_argument("--layers", type=int, default=None,
+                    help="layer-count override (rounded to block periods)")
+    ap.add_argument("--batch", type=int, default=None)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--max-len", type=int, default=64, help="decode cache length")
+    ap.add_argument("--smoke", action="store_true", help="reduced config")
+    ap.add_argument("--engine", choices=("worklist", "passes"),
+                    default="worklist")
+    ap.add_argument("--workers", type=int, default=0,
+                    help="parallel rewriting workers (0 = serial)")
+    ap.add_argument("--no-stamp", action="store_true",
+                    help="disable layer stamping (full trace)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the machine-readable report ('-' = stdout)")
+    ap.add_argument("--inject", metavar="INJECTOR[:INDEX]", default=None,
+                    help="inject a bug into the distributed graph first "
+                         "(testing/demo; see repro.core.inject). INDEX "
+                         "selects the mutation site and defaults to 1 — the "
+                         "first layer collective rather than the embedding "
+                         "region (same convention as the bug benchmarks)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress the human-readable summary")
+    return ap
+
+
+def _plan_of(args) -> Plan:
+    # every axis flag is passed through so contradictory combinations
+    # (e.g. --decode --dp 8) fail Plan validation with exit 2 instead of
+    # silently dropping an axis the user asked to verify
+    kw = dict(dp=args.dp, layers=args.layers, batch=args.batch, seq=args.seq,
+              max_len=args.max_len, smoke=args.smoke)
+    tp = args.tp if args.tp is not None else 1
+    if args.decode:
+        return Plan.decode(tp=tp, **kw)
+    if args.grad:
+        return Plan(tp=tp, mode="grad", **kw)
+    if args.pipeline:
+        # per-stage TP defaults to 2 when --tp is omitted; an explicit
+        # --tp 1 is the user's plan and fails Plan validation (exit 2)
+        return Plan.pipeline(stages=args.pipeline,
+                             tp=tp if args.tp is not None else 2, **kw)
+    return Plan(tp=tp, **kw)
+
+
+def _injector_of(spec: str):
+    from repro.core import inject as inj_mod
+
+    name, _, idx = spec.partition(":")
+    known = {f.__name__: f for f in getattr(inj_mod, "ALL_INJECTORS", [])}
+    fn = known.get(name)
+    if fn is None:
+        raise PlanError(
+            f"unknown injector {name!r} (known: {', '.join(sorted(known))})")
+    index = int(idx) if idx else 1
+
+    def mutate(gd):
+        inj = fn(gd, index=index)
+        if inj is None and not idx:
+            inj = fn(gd)  # default index only: fall back to the first site
+        if inj is None:
+            raise PlanError(
+                f"injector {name!r} found no site at index {index}")
+        return inj.graph
+
+    return mutate
+
+
+def main(argv: Optional[list] = None) -> int:
+    args = build_parser().parse_args(argv)
+    known = set(ARCH_IDS) | set(EXTRA_IDS)
+    if args.arch not in known:
+        print(f"error: unknown arch {args.arch!r} "
+              f"(known: {', '.join(sorted(known))})", file=sys.stderr)
+        return EXIT_USAGE
+    try:
+        plan = _plan_of(args)
+        mutate = _injector_of(args.inject) if args.inject else None
+    except PlanError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return EXIT_USAGE
+
+    from repro.core.verifier import VerifyOptions
+
+    options = VerifyOptions(engine=args.engine,
+                            parallel_workers=args.workers,
+                            stamp=not args.no_stamp)
+    try:
+        with Session(options=options) as session:
+            report = session.verify(args.arch, plan, mutate_dist=mutate)
+    except PlanError as e:
+        print(f"error: {e}", file=sys.stderr)
+        return EXIT_USAGE
+    except ValueError as e:
+        # tracing rejected the plan (e.g. a dim not divisible by tp/dp):
+        # the declared plan cannot run on this config — a usage error
+        print(f"error: plan {plan.describe()} invalid for {args.arch}: {e}",
+              file=sys.stderr)
+        return EXIT_USAGE
+
+    summary_stream = sys.stdout
+    if args.json == "-":
+        print(report.to_json(indent=2))
+        summary_stream = sys.stderr  # keep stdout pure JSON
+    elif args.json:
+        with open(args.json, "w") as fh:
+            fh.write(report.to_json(indent=2) + "\n")
+    if not args.quiet:
+        print(report.summary(), file=summary_stream)
+    return EXIT_VERIFIED if report.verified else EXIT_UNVERIFIED

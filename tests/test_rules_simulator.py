@@ -57,6 +57,15 @@ def eval_graph(g: Graph, leaf_vals: dict, rank=None, axis_size=C):
             sl = tuple(slice(s, l) for s, l in zip(n.param("start_indices"),
                                                    n.param("limit_indices")))
             vals[n.id] = ins[0][sl]
+        elif n.op == "gather":
+            # embedding-style gather: indices (..., 1) into operand rows
+            vals[n.id] = np.take(ins[0], ins[1][..., 0].astype(int), axis=0)
+        elif n.op == "scatter_add":
+            # row scatter-add: operand (V, D), indices (..., 1), updates (..., D)
+            out = ins[0].copy()
+            np.add.at(out, ins[1][..., 0].reshape(-1).astype(int),
+                      ins[2].reshape(-1, ins[2].shape[-1]))
+            vals[n.id] = out
         else:
             raise NotImplementedError(n.op)
     return vals
@@ -274,3 +283,52 @@ def test_gather_dims_sound(gdim_seed, tiled):
     p.register_shard(x, xd, dim=0)
     p.run()
     check_facts(p, gb, gd, {x: X}, dist_vals)
+
+
+def test_dp_gather_scatter_facts_sound():
+    """The data-parallel batch rules: ``gather`` with batch-sharded indices
+    (embedding lookup under DP) derives a sound SHARD fact, and
+    ``scatter_add`` onto an all-zero operand (embedding gradient under DP)
+    derives a sound PARTIAL(add) fact."""
+    rng = np.random.default_rng(2)
+    B, S, V, D = 8, 4, 10, 6
+    dn_g = ("GatherDimensionNumbers(offset_dims=(2,), collapsed_slice_dims=(0,), "
+            "start_index_map=(0,), operand_batching_dims=(), "
+            "start_indices_batching_dims=())")
+    dn_s = ("ScatterDimensionNumbers(update_window_dims=(2,), "
+            "inserted_window_dims=(0,), scatter_dims_to_operand_dims=(0,))")
+
+    def build(b):
+        g = Graph()
+        tbl = g.add("param", (), (V, D), "float64")
+        ids = g.add("input", (), (b, S, 1), "int32")
+        emb = g.add("gather", [tbl, ids], (b, S, D), "float64",
+                    {"dimension_numbers": dn_g, "slice_sizes": (1, D)})
+        upd = g.add("tanh", [emb], (b, S, D), "float64")
+        zero = g.add("const", (), (V, D), "float64",
+                     {"value_hash": "zv", "zero": True})
+        scat = g.add("scatter_add", [zero, ids, upd], (V, D), "float64",
+                     {"dimension_numbers": dn_s})
+        g.mark_output(scat)
+        return g, (tbl, ids, emb, zero, scat)
+
+    gb, (tbl, ids, emb, zero, scat) = build(B)
+    gd, (tbld, idsd, embd, zerod, scatd) = build(B // C)
+
+    T = rng.standard_normal((V, D))
+    I = rng.integers(0, V, size=(B, S, 1))
+    base_vals = {tbl: T, ids: I, zero: np.zeros((V, D))}
+    dist_vals = [
+        {tbld: T, idsd: np.split(I, C, 0)[r], zerod: np.zeros((V, D))}
+        for r in range(C)
+    ]
+    p = Propagator(gb, gd, C)
+    p.register_dup(tbl, tbld)
+    p.register_shard(ids, idsd, dim=0)
+    p.run()
+    n = check_facts(p, gb, gd, base_vals, dist_vals)
+    assert n >= 4, f"too few facts checked ({n})"
+    assert any(f.kind == SHARD and f.base == emb
+               for f in p.store.facts(embd)), "gather shard fact missing"
+    assert any(f.kind == PARTIAL and f.reduce_op == "add" and f.base == scat
+               for f in p.store.facts(scatd)), "scatter_add partial fact missing"

@@ -8,14 +8,19 @@ import pytest
 
 from repro.configs import get_config
 from repro.core.ir import Graph
-from repro.core.modelverify import (
-    _decode_pair,
-    _forward_pair,
-    _round_layers,
-    _spec_input_facts,
-    _stamped_pair,
-    verify_model_tp,
+from repro.core.modelverify import verify_model_tp
+from repro.verify.pairs import (
+    _stamped_parts,
+    _tp_decode_parts as _decode_pair,
+    _tp_forward_parts as _forward_pair,
+    round_layers as _round_layers,
 )
+from repro.verify.specs import spec_input_facts as _spec_input_facts
+
+
+def _stamped_pair(cfg, pair_fn, periods_per_block):
+    parts, _ = _stamped_parts(cfg, pair_fn, periods_per_block)
+    return parts
 from repro.core.partition import partition_layers
 from repro.core.rules import Propagator, WorklistEngine
 from repro.core.stamp import TRACE_PERIODS, stamp_graph

@@ -1,0 +1,246 @@
+"""The unified repro.verify API: Plan validation, Session warm-start
+(template-cache reuse across calls), Report JSON round-trip, CLI exit
+codes, and the localize frontier-selection regression."""
+import json
+
+import pytest
+
+from repro.core.ir import Graph
+from repro.core.relations import RelStore
+from repro.core.report import BugSite, Report, severity_of
+from repro.core.verifier import localize
+from repro.verify import Plan, PlanError, Session, verify
+from repro.verify.cli import main as cli_main
+
+ARCH = "qwen3_4b"
+TP = 4
+
+
+# ------------------------------------------------------------------- Plan
+@pytest.mark.parametrize("kw", [
+    dict(tp=1, dp=1),                 # nothing to verify
+    dict(tp=0),                       # non-positive degree
+    dict(tp=-2),
+    dict(tp=True),                    # bool is not a degree
+    dict(tp=2, mode="sideways"),      # unknown mode
+    dict(tp=1, mode="decode"),        # decode needs tp > 1
+    dict(tp=4, dp=2, mode="decode"),  # decode is tp-axis only
+    dict(dp=1, mode="grad"),          # grad needs dp > 1
+    dict(tp=4, dp=2, mode="grad"),    # grad is dp-axis only
+    dict(tp=2, stages=4),             # stages require mode="pipeline"
+    dict(tp=2, stages=1, mode="pipeline"),
+    dict(tp=1, stages=4, mode="pipeline"),   # per-stage tp needed
+    dict(tp=2, dp=2, batch=3),        # batch not divisible by dp
+    dict(tp=2, batch=0),
+])
+def test_plan_validation_errors(kw):
+    with pytest.raises(PlanError):
+        Plan(**kw)
+
+
+def test_plan_constructors_and_scenarios():
+    assert [s.name for s in Plan(tp=16).scenarios()] == ["tp-forward"]
+    assert [s.name for s in Plan(tp=8, dp=2).scenarios()] == [
+        "tp-forward", "dp-forward"]
+    assert [s.name for s in Plan.decode(tp=16).scenarios()] == ["tp-decode"]
+    assert [s.name for s in Plan.grad(dp=8).scenarios()] == ["dp-grad"]
+    assert [s.name for s in Plan.pipeline(stages=3).scenarios()] == [
+        "stage0", "stage1", "stage2"]
+    p = Plan(tp=8, dp=2)
+    assert p.describe() == "tp8+dp2-forward"
+    assert Plan(**{k: v for k, v in p.to_dict().items()
+                   if v is not None or k in ("layers", "batch")}) == p
+
+
+def test_plan_is_declarative_value():
+    assert Plan(tp=4) == Plan(tp=4)
+    assert hash(Plan(tp=4)) == hash(Plan(tp=4))
+    assert Plan(tp=4) != Plan(tp=8)
+
+
+# ---------------------------------------------------------------- Session
+def test_session_warm_vs_cold():
+    """Second verify of the same arch/plan must be served from the session
+    caches: no re-tracing, fingerprints from the template cache, memo hits
+    on every layer — with the same verdict and outputs."""
+    with Session() as s:
+        plan = Plan(tp=TP, layers=2)
+        cold = s.verify(ARCH, plan)
+        warm = s.verify(ARCH, plan)
+    assert cold.verified and warm.verified
+    assert not cold.cache.trace_cached
+    assert warm.cache.trace_cached, "second call re-traced"
+    assert warm.cache.fp_cached > 0, "fingerprints not served from cache"
+    assert warm.cache.memo_hits >= cold.cache.memo_hits
+    assert warm.timings.trace_s == 0.0 and warm.timings.stamp_s == 0.0
+    assert warm.outputs_ok == cold.outputs_ok
+    # the whole point: warm re-verify is measurably cheaper than cold
+    assert warm.elapsed_s < cold.elapsed_s
+
+
+def test_session_verdict_matches_legacy_entry_point():
+    """Acceptance: Session cold verdicts and fact counts are identical to
+    the deprecated one-shots for TP-forward and TP-decode."""
+    from repro.core.modelverify import verify_decode_tp, verify_model_tp
+
+    with Session() as s:
+        fwd = s.verify(ARCH, Plan(tp=TP, layers=2))
+        dec = s.verify(ARCH, Plan.decode(tp=TP, layers=2))
+    with pytest.warns(DeprecationWarning):
+        old_fwd = verify_model_tp(ARCH, tp=TP, n_layers=2)
+    with pytest.warns(DeprecationWarning):
+        old_dec = verify_decode_tp(ARCH, tp=TP, n_layers=2)
+    assert (fwd.verified, fwd.num_facts) == (old_fwd.verified, old_fwd.num_facts)
+    assert (dec.verified, dec.num_facts) == (old_dec.verified, old_dec.num_facts)
+
+
+def test_session_mutated_runs_bypass_caches():
+    from repro.core.inject import drop_all_reduce
+
+    with Session() as s:
+        plan = Plan(tp=TP, layers=2)
+        good = s.verify(ARCH, plan)
+        bad = s.verify(ARCH, plan,
+                       mutate_dist=lambda gd: drop_all_reduce(gd, index=1).graph)
+        good2 = s.verify(ARCH, plan)
+    assert good.verified and not bad.verified
+    assert bad.bug_sites, "injected bug produced no sites"
+    assert good2.verified and good2.cache.trace_cached, (
+        "mutated run must not poison the session caches")
+
+
+def test_hybrid_plan_scenarios_reported():
+    with Session() as s:
+        rep = s.verify(ARCH, Plan(tp=TP, dp=2, layers=2))
+    assert rep.verified
+    assert [x["scenario"] for x in rep.scenarios] == ["tp-forward", "dp-forward"]
+    assert all(x["verified"] for x in rep.scenarios)
+
+
+def test_grad_plan_verifies():
+    rep = verify(ARCH, Plan.grad(dp=2, layers=2, seq=8))
+    assert rep.verified
+    assert rep.scenarios[0]["scenario"] == "dp-grad"
+
+
+def test_pipeline_plan_verifies():
+    rep = verify(ARCH, Plan.pipeline(stages=2, tp=TP, layers=4))
+    assert rep.verified
+    assert [x["scenario"] for x in rep.scenarios] == ["stage0", "stage1"]
+
+
+# ----------------------------------------------------------------- Report
+def test_report_json_round_trip():
+    from repro.core.inject import drop_all_reduce
+
+    with Session() as s:
+        rep = s.verify(ARCH, Plan(tp=TP, layers=2),
+                       mutate_dist=lambda gd: drop_all_reduce(gd, index=1).graph)
+    assert not rep.verified and rep.bug_sites
+    j = rep.to_json(indent=2)
+    back = Report.from_json(j)
+    assert back.to_json(indent=2) == j  # stable round trip
+    assert back.verified == rep.verified
+    assert [b.category for b in back.bug_sites] == [
+        b.category for b in rep.bug_sites]
+    assert back.plan == rep.plan and back.arch == ARCH
+    # bug sites are severity-ranked
+    ranks = [b.rank for b in rep.bug_sites]
+    assert ranks == sorted(ranks)
+
+
+def test_report_json_schema_guard():
+    rep = verify(ARCH, Plan(tp=TP, layers=2))
+    d = json.loads(rep.to_json())
+    d["schema"] = 999
+    with pytest.raises(ValueError):
+        Report.from_json(json.dumps(d))
+
+
+def test_severity_mapping():
+    assert severity_of("missing_all_reduce") == "high"
+    assert severity_of("precision_mismatch") == "medium"
+    assert severity_of("unverified_frontier") == "low"
+    assert severity_of("anything_else") == "medium"
+    assert BugSite("f.py:1", "add", 0, "missing_all_reduce", "d").severity == "high"
+
+
+# -------------------------------------------------------------------- CLI
+def test_cli_exit_0_verified(tmp_path):
+    out = tmp_path / "report.json"
+    rc = cli_main([ARCH, "--tp", str(TP), "--layers", "2", "--quiet",
+                   "--json", str(out)])
+    assert rc == 0
+    d = json.loads(out.read_text())
+    assert d["verified"] is True and d["schema"] == 1
+
+
+def test_cli_exit_1_unverified():
+    rc = cli_main([ARCH, "--tp", str(TP), "--layers", "2", "--quiet",
+                   "--inject", "drop_all_reduce"])
+    assert rc == 1
+
+
+def test_cli_exit_2_usage():
+    assert cli_main(["no_such_arch", "--tp", "4"]) == 2
+    assert cli_main([ARCH, "--tp", "0"]) == 2  # PlanError
+    assert cli_main([ARCH]) == 2  # no parallelism declared
+    assert cli_main([ARCH, "--tp", "4", "--inject", "bogus"]) == 2
+    with pytest.raises(SystemExit) as e:
+        cli_main([ARCH, "--tp", "not_an_int"])  # argparse usage error
+    assert e.value.code == 2
+
+
+# ------------------------------------------------- localize frontier (fix)
+def _mini_graph():
+    """dist graph: inputs a,b -> c=const -> m=mul(a,c) -> r=add(m,b)."""
+    g = Graph("dist")
+    a = g.add("input", (), (4,))
+    b = g.add("input", (), (4,))
+    c = g.add("const", (), (4,))
+    m = g.add("mul", (a, c), (4,), src="f.py:1")
+    r = g.add("add", (m, b), (4,), src="f.py:2")
+    g.outputs = [r]
+    return g, (a, b, c, m, r)
+
+
+def test_localize_frontier_selection():
+    """Regression for the tangled frontier conditionals: a node is on the
+    frontier iff ALL of its inputs are verified or attribute-only leaves
+    (const/iota/axis_index).  Downstream nodes whose unverified input is a
+    real (non-leaf) node must NOT be reported."""
+    from repro.core.bijection import Layout
+    from repro.core.relations import DUP, Fact
+
+    base, _ = _mini_graph()  # structure irrelevant for the frontier walk
+    dist, (a, b, c, m, r) = _mini_graph()
+    store = RelStore()
+    # inputs a and b verified; const c carries no facts; m unverified
+    store.add(Fact(DUP, a, a, 2, Layout.identity((4,))))
+    store.add(Fact(DUP, b, b, 2, Layout.identity((4,))))
+
+    sites = localize(base, dist, store)
+    # m's inputs are {verified a, const c} -> frontier; r's inputs include
+    # the unverified non-leaf m -> NOT the frontier
+    assert [s.node for s in sites] == [m]
+    assert sites[0].category == "unverified_frontier"
+
+    # once m verifies, r (inputs m,b both verified) becomes the frontier
+    store.add(Fact(DUP, m, m, 2, Layout.identity((4,))))
+    sites = localize(base, dist, store)
+    assert [s.node for s in sites] == [r]
+
+
+def test_localize_input_leaf_not_frontier():
+    """An unverified *graph input* (op='input', no facts) disqualifies its
+    consumers from the frontier — pinning the legacy behavior."""
+    from repro.core.bijection import Layout
+    from repro.core.relations import DUP, Fact
+
+    base, _ = _mini_graph()
+    dist, (a, b, c, m, r) = _mini_graph()
+    store = RelStore()
+    store.add(Fact(DUP, a, a, 2, Layout.identity((4,))))
+    store.add(Fact(DUP, m, m, 2, Layout.identity((4,))))
+    # b (a real input leaf) has no facts: r = add(m, b) must not be reported
+    assert localize(base, dist, store) == []
