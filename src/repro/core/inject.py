@@ -277,6 +277,46 @@ def wrong_all_gather_dim(g: Graph, index: int = 0) -> Optional[Injection]:
     )
 
 
+def wrong_scatter_dim(g: Graph, index: int = 0) -> Optional[Injection]:
+    """reduce_scatter along the wrong dimension (sequence-parallel bug:
+    scattering hidden instead of sequence), reshaped back so downstream
+    shapes still match — the silent part."""
+
+    tgt = _find(g, "reduce_scatter",
+                lambda n: len(n.shape) >= 2 and bool(n.inputs), index)
+    if tgt is None:
+        return None
+    dim = tgt.param("scatter_dimension", 0)
+    in_shape = g[tgt.inputs[0]].shape
+    c = in_shape[dim] // tgt.shape[dim]
+    new_dim = next((i for i in range(len(in_shape))
+                    if i != dim and in_shape[i] % c == 0), None)
+    if new_dim is None:
+        return None
+
+    def edit(ng: Graph, n: Node, remap):
+        if n.id == tgt.id:
+            src_shape = ng[remap[n.inputs[0]]].shape
+            new_shape = list(src_shape)
+            new_shape[new_dim] = new_shape[new_dim] // c
+            scat = ng.add("reduce_scatter", [remap[n.inputs[0]]],
+                          tuple(new_shape), n.dtype,
+                          _remap_params(n.params, scatter_dimension=new_dim),
+                          src=n.src, layer=n.layer, scope=n.scope)
+            return ng.add("reshape", [scat], n.shape, n.dtype,
+                          {"new_sizes": n.shape}, src=n.src, layer=n.layer,
+                          scope=n.scope)
+        return None
+
+    return Injection(
+        f"wrong_scatter_dim@{index}",
+        f"reduce_scatter at {tgt.src} scatters along dim {new_dim} instead of {dim}",
+        "layout_mismatch",
+        _surgery(g, edit),
+        tgt.src,
+    )
+
+
 def shifted_slice(g: Graph, index: int = 0) -> Optional[Injection]:
     def pred(n: Node) -> bool:
         st = n.param("start_indices")
@@ -317,6 +357,7 @@ ALL_INJECTORS = [
     swap_reshape_dims,
     wrong_transpose,
     wrong_all_gather_dim,
+    wrong_scatter_dim,
     shifted_slice,
 ]
 

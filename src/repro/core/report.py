@@ -82,12 +82,17 @@ class CacheStats:
     """Session-level cache effectiveness for one verification call.
 
     ``trace_cached`` proves the graph pair was served from the session's
-    trace cache (no re-tracing); ``fp_cached`` counts layer fingerprints and
-    boundary-input lists served from a template cache (stamped periods
-    within a run, every layer on a warm re-verify); the remaining counters
-    mirror :class:`~repro.core.partition.MemoStats`."""
+    trace cache (no re-tracing); ``base_trace_cached`` that the *base*
+    (single-device) trace was shared from another scenario of the plan with
+    identical program + avals (the base-trace cache is keyed on
+    ``(arch, aval signature)``, not the scenario name); ``fp_cached``
+    counts layer fingerprints and boundary-input lists served from a
+    template cache (stamped periods within a run, every layer on a warm
+    re-verify); the remaining counters mirror
+    :class:`~repro.core.partition.MemoStats`."""
 
     trace_cached: bool = False
+    base_trace_cached: bool = False
     fp_cached: int = 0
     memo_hits: int = 0
     facts_replayed: int = 0
@@ -223,8 +228,13 @@ def _plan_label(plan: dict) -> str:
     parts = []
     if plan.get("tp", 1) > 1:
         parts.append(f"tp{plan['tp']}")
+    if plan.get("sp"):
+        parts.append("sp")
+    if plan.get("ep", 1) > 1:
+        parts.append(f"ep{plan['ep']}")
     if plan.get("dp", 1) > 1:
-        parts.append(f"dp{plan['dp']}")
+        parts.append(f"dp{plan['dp']}x" if plan.get("composite")
+                     else f"dp{plan['dp']}")
     mode = plan.get("mode", "forward")
     if plan.get("stages", 1) > 1:
         parts.append(f"pp{plan['stages']}")

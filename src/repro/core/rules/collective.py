@@ -9,7 +9,7 @@ from typing import Optional
 from ..bijection import Layout, NotSplitMerge
 from ..ir import Node
 from ..relations import DUP, LOOPRED, PARTIAL, SHARD, Fact
-from .common import move_dim
+from .common import move_dim, shard_stack_layout
 from .registry import DEFAULT_REGISTRY as R
 
 
@@ -23,6 +23,93 @@ def _axis_match(prop, d: Node) -> bool:
 def _full_group(d: Node) -> bool:
     groups = d.param("groups")
     return groups is None or groups == "full"
+
+
+# dims a collective moves data along (SHARD facts on any *other* dim carry
+# through an orthogonal-axis collective untouched)
+def _touched_dims(d: Node) -> tuple:
+    if d.op == "all_gather":
+        return (d.param("all_gather_dimension", 0),)
+    if d.op == "reduce_scatter":
+        return (d.param("scatter_dimension", 0),)
+    if d.op == "all_to_all":
+        return (d.param("split_axis"), d.param("concat_axis"))
+    return ()
+
+
+@R.rule("orthogonal_collective",
+        ("all_reduce", "all_gather", "reduce_scatter", "all_to_all"),
+        consumes=(DUP, SHARD, PARTIAL))
+def orthogonal_collective(prop, d: Node) -> None:
+    """Collective over a *different* mesh axis than the one being verified
+    (composite tp x dp plans verify the data axis of a 2D program whose
+    baseline is the 1D tensor-parallel per-device program): at every rank of
+    the verified axis the op applies the same deterministic function, so it
+    is congruence-transparent — dup/shard/partial(add) facts carry to the
+    matching baseline collective (same op, identical params).  Shard facts
+    require the sharded dim untouched by the collective (the op then
+    commutes with stacking over the verified axis); partial(add) requires a
+    linear collective (sum/data movement, not max/min)."""
+    axes = d.param("axes") or ()
+    if prop.axis in tuple(axes):
+        return  # this axis's collectives are handled by the rules above
+    linear = d.param("reduce_op", "add") == "add"
+    touched = _touched_dims(d)
+    for f in prop.store.facts(d.inputs[0]):
+        if f.kind == DUP:
+            if not (f.layout.effectively_identity
+                    and f.layout.src_shape == f.layout.dst_shape):
+                continue
+        elif f.kind == SHARD:
+            k = prop._shard_src_dim(f)
+            if k is None or k in touched:
+                continue
+        elif f.kind == PARTIAL:
+            if f.reduce_op != "add" or not linear:
+                continue
+            if not (f.layout.effectively_identity
+                    and f.layout.src_shape == f.layout.dst_shape):
+                continue
+        else:
+            continue
+        for z in prop._base_candidates(d.op, [f.base], d.params, layer=d.layer):
+            if not prop._dtype_ok(z, d):
+                continue
+            if f.kind == DUP:
+                prop.emit(Fact(DUP, z.id, d.id, prop.size, Layout.identity(z.shape)))
+            elif f.kind == PARTIAL:
+                prop.emit(Fact(PARTIAL, z.id, d.id, prop.size,
+                               Layout.identity(z.shape), reduce_op="add"))
+            else:
+                if z.shape[k] % prop.size != 0:
+                    continue
+                try:
+                    lay = shard_stack_layout(z.shape, k, prop.size)
+                except NotSplitMerge:
+                    continue
+                prop.emit(Fact(SHARD, z.id, d.id, prop.size, lay))
+
+
+@R.rule("axis_index_congruence", ("axis_index",))
+def axis_index_congruence(prop, d: Node) -> None:
+    """axis_index over a *different* axis than the one verified is the same
+    value at every rank of the verified axis — congruent-dup with the
+    baseline axis_index carrying identical params (composite plans: the
+    baseline per-device program queries its own rank the same way)."""
+    axes = d.param("axes") or ()
+    if prop.axis in tuple(axes):
+        return  # rank-dependent along the verified axis: no relation
+    cache = getattr(prop, "_axis_index_bases", None)
+    if cache is None:
+        cache = {}
+        for b in prop.base:
+            if b.op == "axis_index":
+                cache.setdefault(b.params, []).append(b.id)
+        prop._axis_index_bases = cache
+    for zid in cache.get(d.params, []):
+        z = prop.base[zid]
+        if z.dtype == d.dtype and z.shape == d.shape:
+            prop.emit(Fact(DUP, zid, d.id, prop.size, Layout.identity(z.shape)))
 
 
 @R.rule("all_reduce", ("all_reduce",), consumes=(PARTIAL, DUP, LOOPRED))

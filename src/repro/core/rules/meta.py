@@ -11,9 +11,9 @@ re-apply them after each pass / worklist drain until they fire nothing new.
 from __future__ import annotations
 
 from ..bijection import Layout
-from ..relations import DUP, SHARD, Fact
+from ..relations import DUP, PARTIAL, SHARD, Fact
 
-# template fingerprints are pure functions of (shapes, dtype, size):
+# template fingerprints are pure functions of (variant, shapes, dtype, size):
 # cache process-wide, like the old Propagator class attribute did
 _vp_embed_templates: dict = {}
 
@@ -22,7 +22,8 @@ def apply_meta_rules(prop) -> None:
     if not hasattr(prop, "_meta_groups"):
         groups: dict[str, list[int]] = {}
         for n in prop.dist:
-            if "vp_embed" in n.scope.split("/"):
+            parts = n.scope.split("/")
+            if "vp_embed" in parts or "vp_embed_sp" in parts:
                 groups.setdefault(n.scope, []).append(n.id)
         prop._meta_groups = []
         for scope, nids in groups.items():
@@ -41,10 +42,22 @@ def apply_meta_rules(prop) -> None:
 def _meta_vp_embed(prop, nids: list[int], scope: str = "vp_embed") -> None:
     g = prop.dist
     inside = set(nids)
-    # region output: the all_reduce whose consumers escape the region
-    outs = [nid for nid in nids
-            if g[nid].op == "all_reduce"
-            and (any(c not in inside for c in g.consumers(nid)) or nid in g.outputs)]
+    # "vp_embed_sp": the sequence-parallel variant — the region is the
+    # *partial* (masked local lookup, no reduction); the escaping node is
+    # the mask product and it earns a partial(add) fact the downstream
+    # reduce_scatter discharges through the ordinary collective rule.
+    partial = "vp_embed_sp" in scope.split("/")
+    if partial:
+        outs = [nid for nid in nids
+                if g[nid].op == "mul"
+                and (any(c not in inside for c in g.consumers(nid))
+                     or nid in g.outputs)]
+    else:
+        # region output: the all_reduce whose consumers escape the region
+        outs = [nid for nid in nids
+                if g[nid].op == "all_reduce"
+                and (any(c not in inside for c in g.consumers(nid))
+                     or nid in g.outputs)]
     if len(outs) != 1 or prop.store.verified(outs[0]):
         return
     out = outs[0]
@@ -66,7 +79,7 @@ def _meta_vp_embed(prop, nids: list[int], scope: str = "vp_embed") -> None:
         return
     # template fingerprint: trace the trusted generator with these shapes
     if not _vp_embed_template_ok(prop, nids, g[table].shape, g[ids].shape,
-                                 g[table].dtype):
+                                 g[table].dtype, partial=partial):
         prop.store.diag(
             out, "layout_mismatch",
             "vp_embed region deviates from the trusted template")
@@ -90,14 +103,20 @@ def _meta_vp_embed(prop, nids: list[int], scope: str = "vp_embed") -> None:
         z = prop.base[zid]
         if z.op == "gather" and len(z.inputs) == 2 and derives_from(
                 z.inputs[1], ifact.base) and z.dtype == g[out].dtype:
-            prop.emit(Fact(DUP, zid, out, prop.size, Layout.identity(z.shape)))
+            if partial:
+                prop.emit(Fact(PARTIAL, zid, out, prop.size,
+                               Layout.identity(z.shape), reduce_op="add"))
+            else:
+                prop.emit(Fact(DUP, zid, out, prop.size,
+                               Layout.identity(z.shape)))
             prop.store.covered_scopes.add(scope)
             prop.store.covered_nodes.update(nids)
             return
 
 
-def _vp_embed_template_ok(prop, nids, table_shape, ids_shape, dtype) -> bool:
-    key = (tuple(table_shape), tuple(ids_shape), dtype, prop.size)
+def _vp_embed_template_ok(prop, nids, table_shape, ids_shape, dtype,
+                          partial: bool = False) -> bool:
+    key = (partial, tuple(table_shape), tuple(ids_shape), dtype, prop.size)
     if key not in _vp_embed_templates:
         import jax
         import jax.numpy as jnp
@@ -105,7 +124,7 @@ def _vp_embed_template_ok(prop, nids, table_shape, ids_shape, dtype) -> bool:
 
         from repro.compat import abstract_mesh
 
-        from repro.parallel.collectives import vp_embed
+        from repro.parallel.collectives import vp_embed, vp_embed_partial
 
         from ..trace import trace_sharded
 
@@ -113,8 +132,9 @@ def _vp_embed_template_ok(prop, nids, table_shape, ids_shape, dtype) -> bool:
         tbl = jax.ShapeDtypeStruct((table_shape[0] * prop.size, table_shape[1]),
                                    dtype)
         idv = jax.ShapeDtypeStruct(tuple(ids_shape), jnp.int32)
+        gen = vp_embed_partial if partial else vp_embed
         gt, t_in, _ = trace_sharded(
-            lambda t, i: vp_embed(t, i, prop.axis), mesh,
+            lambda t, i: gen(t, i, prop.axis), mesh,
             (P(prop.axis, None), P()), P(), tbl, idv)
         body = [n.id for n in gt if n.op not in ("input", "param", "const")]
         _vp_embed_templates[key] = gt.fingerprint(sorted(body),

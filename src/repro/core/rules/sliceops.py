@@ -6,6 +6,7 @@ from __future__ import annotations
 
 import itertools
 import re
+from typing import Optional
 
 from ..bijection import Layout, NotSplitMerge
 from ..ir import Node
@@ -179,6 +180,100 @@ def dynamic_sliceish(prop, d: Node) -> None:
             except NotSplitMerge:
                 continue
             prop.emit(Fact(SHARD, z.id, d.id, prop.size, lay))
+
+
+def _zero_index(g, nid: int) -> bool:
+    n = g[nid]
+    while n.op == "convert" and n.inputs:
+        n = g[n.inputs[0]]
+    return n.op == "const" and (bool(n.param("zero"))
+                                or n.param("value") == 0)
+
+
+def _unwrap_index(g, n):
+    """Strip value-preserving index wrappers: converts and the negative-
+    index wrap ``select(lt(s, 0), s, s + dim)`` jnp's dynamic_slice_in_dim
+    emits (a no-op for the non-negative rank-scaled starts we match)."""
+    while True:
+        if n.op == "convert" and n.inputs:
+            n = g[n.inputs[0]]
+            continue
+        if n.op == "select" and len(n.inputs) == 3:
+            # select_n picks cases[pred]: c0 when s >= 0 (the value we
+            # return), c1 = s + dim when s < 0.  Only this orientation is
+            # value-preserving for non-negative starts — the mirrored
+            # select(lt(s,0), s+K, s) evaluates to s+K and must NOT unwrap.
+            pred, c0, c1 = (g[i] for i in n.inputs)
+            if (pred.op == "lt" and len(pred.inputs) == 2
+                    and _zero_index(g, pred.inputs[1])):
+                s = pred.inputs[0]
+                if (c0.id == s and c1.op == "add" and s in c1.inputs):
+                    n = g[s]
+                    continue
+        return n
+
+
+def _rank_scaled_chunk(prop, nid: int) -> Optional[int]:
+    """Chunk size when ``nid`` computes ``axis_index(verified_axis) * chunk``
+    (or bare ``axis_index``, chunk=1); None otherwise."""
+    g = prop.dist
+    n = _unwrap_index(g, g[nid])
+    if n.op == "axis_index":
+        return 1 if prop.axis in tuple(n.param("axes") or ()) else None
+    if n.op == "mul" and len(n.inputs) == 2:
+        a, b = (_unwrap_index(g, g[i]) for i in n.inputs)
+        if b.op == "axis_index":
+            a, b = b, a
+        if (a.op == "axis_index" and prop.axis in tuple(a.param("axes") or ())
+                and b.op == "const" and isinstance(b.param("value"), int)
+                and b.param("value") > 0):
+            return b.param("value")
+    return None
+
+
+@R.rule("rank_dynamic_slice", ("dynamic_slice",), consumes=(DUP,))
+def rank_dynamic_slice(prop, d: Node) -> None:
+    """``dynamic_slice(x', starts...)`` taking this rank's contiguous chunk
+    of a replicated tensor: exactly one start is ``axis_index * chunk`` with
+    ``chunk`` the local extent of that dim, the rest are zero — stacking the
+    per-rank chunks reconstructs the baseline tensor, a clean SHARD fact.
+    This is how per-device programs enter a sharded region from replicated
+    data (sequence-parallel slicing of a replicated frontend prefix, the
+    expert-parallel slice of the dense routing weights)."""
+    x = d.inputs[0]
+    idx_in = d.inputs[1:]
+    if not idx_in:
+        return
+    xshape = prop.dist[x].shape
+    if len(idx_in) != len(xshape):
+        return
+    k = None
+    for i, nid in enumerate(idx_in):
+        if _zero_index(prop.dist, nid):
+            continue
+        chunk = _rank_scaled_chunk(prop, nid)
+        if chunk is None or k is not None:
+            return  # a non-zero start that is not the rank chunk, or two
+        if chunk != d.shape[i] or xshape[i] != chunk * prop.size:
+            return
+        k = i
+    if k is None:
+        return
+    # every non-k dim must be taken whole
+    if any(d.shape[i] != xshape[i] for i in range(len(xshape)) if i != k):
+        return
+    for f in prop.store.facts_kind(x, DUP):
+        if not dup_id(f):
+            continue
+        bshape = prop.base[f.base].shape
+        if len(bshape) != len(xshape) or bshape[k] % prop.size != 0:
+            continue
+        try:
+            lay = shard_stack_layout(bshape, k, prop.size)
+        except NotSplitMerge:
+            continue
+        if prop.base[f.base].dtype == d.dtype:
+            prop.emit(Fact(SHARD, f.base, d.id, prop.size, lay))
 
 
 def _gather_dims(dn: str, name: str) -> tuple:

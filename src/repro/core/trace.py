@@ -178,6 +178,13 @@ class Tracer:
             # all-zero payload: rules about additive identities (scatter-add
             # gradient accumulation, zero-padding of partial sums) key on this
             cparams["zero"] = True
+        if val is not None:
+            arr = np.asarray(val)
+            if arr.shape == () and arr.dtype.kind in "ib":
+                # scalar int/bool payload carried on the node: rank-indexed
+                # slicing rules (sliceops.rank_dynamic_slice) match the chunk
+                # constant in ``axis_index * chunk`` start computations
+                cparams["value"] = int(arr)
         nid = self.g.add("const", (), shape, dtype, cparams)
         if val is not None:
             self._record_scalar(nid, val)

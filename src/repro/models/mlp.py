@@ -131,18 +131,12 @@ def moe_fwd(cfg, ctx: ParallelCtx, p, x):
     return y
 
 
-def moe_dense_fwd(cfg, ctx: ParallelCtx, p, x):
-    """Dense-masked MoE formulation: every expert computes every token and a
-    top-k weight mask combines them.  Numerically equals capacity-MoE with
-    infinite capacity; cost O(E/topk) higher — used for the *verification*
-    graphs (static dataflow: all ops are einsums over the expert dim, TP
-    shards the expert FFN width, one psum discharges).  The execution path
-    stays the capacity dispatch (moe_fwd)."""
-    B, S, D = x.shape
-    T = B * S
+def _dense_router_weights(cfg, p, xf):
+    """Dense top-k routing mask (T, E) float32: softmax + top-k +
+    renormalize, scattered back to a dense per-expert weight column."""
+    T = xf.shape[0]
     E = cfg.experts
     K = cfg.top_k
-    xf = x.reshape(T, D)
     logits = (xf.astype(jnp.float32) @ p["router"]["w"]).astype(jnp.float32)
     if cfg.n_experts_padded and cfg.n_experts_padded > cfg.n_experts:
         pad_mask = jnp.arange(E) >= cfg.n_experts
@@ -152,8 +146,20 @@ def moe_dense_fwd(cfg, ctx: ParallelCtx, p, x):
     w = w / jnp.maximum(w.sum(-1, keepdims=True), 1e-9)
     dense_w = jnp.zeros((T, E), jnp.float32)
     tok = jnp.arange(T)[:, None].repeat(K, 1)
-    dense_w = dense_w.at[tok.reshape(-1), idx.reshape(-1)].add(w.reshape(-1))
-    dense_w = dense_w.astype(x.dtype)
+    return dense_w.at[tok.reshape(-1), idx.reshape(-1)].add(w.reshape(-1))
+
+
+def moe_dense_fwd(cfg, ctx: ParallelCtx, p, x):
+    """Dense-masked MoE formulation: every expert computes every token and a
+    top-k weight mask combines them.  Numerically equals capacity-MoE with
+    infinite capacity; cost O(E/topk) higher — used for the *verification*
+    graphs (static dataflow: all ops are einsums over the expert dim, TP
+    shards the expert FFN width, one psum discharges).  The execution path
+    stays the capacity dispatch (moe_fwd)."""
+    B, S, D = x.shape
+    T = B * S
+    xf = x.reshape(T, D)
+    dense_w = _dense_router_weights(cfg, p, xf).astype(x.dtype)
 
     h = jax.nn.silu(jnp.einsum("td,edf->tef", xf, p["wg"])) * jnp.einsum(
         "td,edf->tef", xf, p["wu"])
@@ -163,6 +169,58 @@ def moe_dense_fwd(cfg, ctx: ParallelCtx, p, x):
         y = jax.lax.psum(y, ctx.tp_axis)
     y = y.reshape(B, S, D)
     if "shared" in p:
+        y = y + ctx.psum_tp(_shared_fwd(cfg, p["shared"], x))
+    if ctx.sp and ctx.tp_axis:
+        # under SP the caller expects a sequence-sharded activation; y is
+        # replicated here so the local shard is just this rank's slice
+        chunk = S // ctx.tp_size
+        r = jax.lax.axis_index(ctx.tp_axis)
+        y = jax.lax.dynamic_slice_in_dim(y, r * chunk, chunk, axis=1)
+    return y
+
+
+def moe_ep_fwd(cfg, ctx: ParallelCtx, p, x):
+    """Expert-parallel dense-masked MoE (the EP *verification* formulation):
+    each rank holds its expert slice of the stacked weights
+    (``(E_loc, D, F)``, sharded over the expert dim), takes its slice of the
+    dense routing mask by rank index, and accumulates the weighted local
+    expert outputs as an **unrolled slice/add loop** discharged by one
+    all_reduce over the expert axis — the paper's slice / loop_red_B /
+    loop_red_D relation family (Fig. 8), now exercised by a whole-model
+    scenario.  Numerically equals ``moe_dense_fwd``; with ``ctx.single()``
+    (ep=1) the same code is the dense baseline whose add-chain over all E
+    expert slices is exactly what ``loop_red_B`` matches."""
+    B, S, D = x.shape
+    T = B * S
+    E = cfg.experts
+    xf = x.reshape(T, D)
+    dense_w = _dense_router_weights(cfg, p, xf).astype(x.dtype)
+
+    ep = ctx.ep_size if ctx.ep_axis else 1
+    E_loc = E // ep
+    if ctx.ep_axis:
+        first = jax.lax.axis_index(ctx.ep_axis) * E_loc
+        dw = jax.lax.dynamic_slice_in_dim(dense_w, first, E_loc, axis=1)
+    else:
+        dw = dense_w  # (T, E) — the full dense mask
+
+    # local expert compute: (T, E_loc, D); weights arrive expert-sharded
+    h = jax.nn.silu(jnp.einsum("td,edf->tef", xf, p["wg"])) * jnp.einsum(
+        "td,edf->tef", xf, p["wu"])
+    eout = jnp.einsum("tef,efd->ted", h, p["wo"])
+    weighted = eout * dw[:, :, None]  # (T, E_loc, D)
+
+    # unrolled per-expert accumulation (slice -> add chain)
+    acc = None
+    for e in range(E_loc):
+        chunk = jax.lax.slice_in_dim(weighted, e, e + 1, axis=1)  # (T, 1, D)
+        acc = chunk if acc is None else acc + chunk
+    if ctx.ep_axis:
+        acc = jax.lax.psum(acc, ctx.ep_axis)
+    y = acc.reshape(B, S, D)
+    if "shared" in p:
+        # EP scenarios keep non-expert params replicated: the shared expert
+        # runs dense (psum_tp is the identity without a tp axis)
         y = y + ctx.psum_tp(_shared_fwd(cfg, p["shared"], x))
     return y
 

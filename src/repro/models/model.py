@@ -24,7 +24,12 @@ from repro.configs.base import ArchConfig
 from repro.parallel.ctx import ParallelCtx
 
 from .attention import attn_decode, attn_fwd, attn_init, attn_init_cache
-from .mlp import mlp_fwd, mlp_init, moe_dense_fwd, moe_fwd, moe_init
+from .mlp import mlp_fwd, mlp_init, moe_dense_fwd, moe_ep_fwd, moe_fwd, moe_init
+
+# moe_impl -> forward implementation: "capacity" is the execution dispatch,
+# "dense" the TP verification formulation, "ep" the expert-parallel
+# verification formulation (unrolled expert slice/add loop)
+MOE_IMPLS = {"capacity": moe_fwd, "dense": moe_dense_fwd, "ep": moe_ep_fwd}
 from .modules import _init, linear, linear_init, rmsnorm, rmsnorm_init
 from .ssm import ssm_decode, ssm_fwd, ssm_init, ssm_init_cache
 
@@ -103,16 +108,16 @@ class Model:
         if not ctx.tp_axis:
             x = jnp.take(table, ids, axis=0)
             return ctx.sp_enter(x) if ctx.sp else x
-        from repro.parallel.collectives import vp_embed
+        from repro.parallel.collectives import vp_embed, vp_embed_partial
 
         if ctx.sp:
+            # the masked local lookup is the shared trusted template
+            # (verifier meta rule "vp_embed_sp" emits a partial(add) fact on
+            # it); the reduce_scatter entering the SP region stays OUTSIDE
+            # the scope so the ordinary collective rule discharges it
             with jax.named_scope("vp_embed_sp"):
-                V_loc = table.shape[0]
-                off = lax.axis_index(ctx.tp_axis) * V_loc
-                local = jnp.clip(ids - off, 0, V_loc - 1)
-                x = jnp.take(table, local, axis=0)
-                mask = ((ids >= off) & (ids < off + V_loc))[..., None]
-                return ctx.sp_enter(x * mask.astype(x.dtype))
+                x = vp_embed_partial(table, ids, ctx.tp_axis)
+            return ctx.sp_enter(x)
         with jax.named_scope("vp_embed"):
             return vp_embed(table, ids, ctx.tp_axis)
 
@@ -165,8 +170,7 @@ class Model:
             h = ctx.sp_exit(x)
             hn = rmsnorm(lparams["ln2"], h, cfg.norm_eps)
             if cfg.is_moe_layer(j):
-                fwd = moe_dense_fwd if self.moe_impl == "dense" else moe_fwd
-                y = fwd(cfg, ctx, lparams["moe"], hn)
+                y = MOE_IMPLS[self.moe_impl](cfg, ctx, lparams["moe"], hn)
             else:
                 y = mlp_fwd(cfg, ctx, lparams["mlp"], hn)
             x = x + y
@@ -270,8 +274,7 @@ class Model:
                   if "ln2" in bparams[j]:
                       hn = rmsnorm(bparams[j]["ln2"], h, cfg.norm_eps)
                       if cfg.is_moe_layer(j):
-                          fwd = moe_dense_fwd if self.moe_impl == "dense" else moe_fwd
-                          y = fwd(cfg, ctx, bparams[j]["moe"], hn)
+                          y = MOE_IMPLS[self.moe_impl](cfg, ctx, bparams[j]["moe"], hn)
                       else:
                           y = mlp_fwd(cfg, ctx, bparams[j]["mlp"], hn)
                       h = h + y

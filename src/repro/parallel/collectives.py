@@ -14,8 +14,13 @@ import jax.numpy as jnp
 from jax import lax
 
 
-def vp_embed(table, ids, axis: str):
-    """Vocab-parallel embedding: local-chunk lookup + range mask + psum.
+def vp_embed_partial(table, ids, axis: str):
+    """Vocab-parallel embedding *partial*: local-chunk lookup + range mask,
+    NO reduction — the per-rank contribution whose axis-sum is the full
+    lookup.  Sequence-parallel embeddings discharge it with a
+    reduce_scatter instead of the psum (see ``vp_embed``); the verifier's
+    ``vp_embed_sp`` meta rule trusts this exact subgraph and emits a
+    partial(add) fact on its output.
 
     table: (V_loc, D) this rank's vocab rows; ids: integer tokens (any shape).
     """
@@ -24,4 +29,12 @@ def vp_embed(table, ids, axis: str):
     local = jnp.clip(ids - off, 0, V_loc - 1)
     x = jnp.take(table, local, axis=0)
     mask = ((ids >= off) & (ids < off + V_loc))[..., None]
-    return lax.psum(x * mask.astype(x.dtype), axis)
+    return x * mask.astype(x.dtype)
+
+
+def vp_embed(table, ids, axis: str):
+    """Vocab-parallel embedding: local-chunk lookup + range mask + psum.
+
+    table: (V_loc, D) this rank's vocab rows; ids: integer tokens (any shape).
+    """
+    return lax.psum(vp_embed_partial(table, ids, axis), axis)

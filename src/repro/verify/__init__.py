@@ -7,8 +7,11 @@ parallelization (the Scalify technique as a *reusable gate*):
 
     with Session() as s:
         report = s.verify("llama3_8b", Plan(tp=16))       # TP forward
+        report = s.verify("llama3_8b", Plan(tp=16, sp=True))  # sequence par.
+        report = s.verify("mixtral_8x7b", Plan(ep=4))     # expert parallel
         report = s.verify("llama3_8b", Plan.decode(tp=16))  # serving step
         report = s.verify("qwen3_4b", Plan(tp=8, dp=2))   # hybrid, per axis
+        report = s.verify("qwen3_4b", Plan(tp=4, dp=2, composite=True))
         report = s.verify("qwen3_4b", Plan.grad(dp=8))    # DP gradient sync
         report = s.verify("qwen3_4b", Plan.pipeline(stages=4))
 
@@ -20,8 +23,15 @@ persistent worker pool), so sweeps and re-verifies are warm-start:
 ``report.cache`` proves template reuse (``trace_cached``/``fp_cached``).
 One-shots: :func:`verify`.  CLI: ``python -m repro.verify <arch> --tp 16``.
 
+Scenarios are resolved through the registry in
+:mod:`repro.verify.scenarios` (``DEFAULT_SCENARIOS``): each parallelism
+axis registers its builder once over shared harness plumbing, so a new
+axis is a ~100-line registration.  ``python -m repro.verify --list``
+enumerates them.
+
 The legacy entry points (``repro.core.verify_model_tp`` /
-``verify_decode_tp``) are deprecation shims over this package;
+``verify_decode_tp``) and the old builder module
+(``repro.verify.pairs``) are deprecation shims over this package;
 ``repro.core.verify_graphs`` / ``verify_sharded`` remain the graph-level
 engine API underneath.
 """
@@ -35,6 +45,7 @@ from repro.core.report import (
 from repro.core.verifier import VerifyOptions
 
 from .plan import Plan, PlanError, Scenario
+from .scenarios import DEFAULT_SCENARIOS, ScenarioRegistry, ScenarioSpec
 from .session import Session, verify
 from .specs import shard_dim, spec_input_facts, spec_output_specs
 
@@ -42,6 +53,7 @@ __all__ = [
     "BugSite", "CacheStats", "PhaseTimings", "Report", "severity_of",
     "VerifyOptions",
     "Plan", "PlanError", "Scenario",
+    "DEFAULT_SCENARIOS", "ScenarioRegistry", "ScenarioSpec",
     "Session", "verify",
     "shard_dim", "spec_input_facts", "spec_output_specs",
 ]

@@ -1,13 +1,15 @@
 """Command-line verification gate.
 
     python -m repro.verify <arch> --tp 16 [--decode | --grad | --pipeline K]
-                           [--dp N] [--layers N] [--json out.json|-]
+                           [--dp N] [--sp] [--ep N] [--composite]
+                           [--layers N] [--json out.json|-]
+    python -m repro.verify --list
 
 Exit codes (stable contract for CI and launcher scripts):
 
     0  plan verified
     1  plan NOT verified (bug sites in the report)
-    2  usage error (unknown arch, invalid plan, bad flags)
+    2  usage error (unknown arch/scenario, invalid plan, bad flags)
 """
 from __future__ import annotations
 
@@ -36,9 +38,21 @@ def build_parser() -> argparse.ArgumentParser:
         prog="python -m repro.verify",
         description="Verify a model's parallelization plan "
                     "(graph equivalence, paper-style).")
-    ap.add_argument("arch", help="architecture id (repro.configs)")
+    ap.add_argument("arch", nargs="?", default=None,
+                    help="architecture id (repro.configs)")
+    ap.add_argument("--list", action="store_true",
+                    help="list registered scenarios and known archs, then exit")
     ap.add_argument("--tp", type=int, default=None, help="tensor-parallel degree")
     ap.add_argument("--dp", type=int, default=1, help="data-parallel degree")
+    ap.add_argument("--ep", type=int, default=1,
+                    help="expert-parallel degree (MoE archs: verifies the "
+                         "expert axis via the unrolled expert-slice loop)")
+    ap.add_argument("--sp", action="store_true",
+                    help="sequence parallelism: verify the reduce_scatter/"
+                         "all_gather forward instead of the psum forward")
+    ap.add_argument("--composite", action="store_true",
+                    help="with --tp and --dp: also verify the tp x dp "
+                         "2D program against the 1D TP program")
     mode = ap.add_mutually_exclusive_group()
     mode.add_argument("--decode", action="store_true",
                       help="verify the serving decode step (tp axis)")
@@ -73,9 +87,10 @@ def build_parser() -> argparse.ArgumentParser:
 
 def _plan_of(args) -> Plan:
     # every axis flag is passed through so contradictory combinations
-    # (e.g. --decode --dp 8) fail Plan validation with exit 2 instead of
-    # silently dropping an axis the user asked to verify
-    kw = dict(dp=args.dp, layers=args.layers, batch=args.batch, seq=args.seq,
+    # (e.g. --decode --dp 8, --decode --sp) fail Plan validation with exit 2
+    # instead of silently dropping an axis the user asked to verify
+    kw = dict(dp=args.dp, ep=args.ep, sp=args.sp, composite=args.composite,
+              layers=args.layers, batch=args.batch, seq=args.seq,
               max_len=args.max_len, smoke=args.smoke)
     tp = args.tp if args.tp is not None else 1
     if args.decode:
@@ -88,6 +103,17 @@ def _plan_of(args) -> Plan:
         return Plan.pipeline(stages=args.pipeline,
                              tp=tp if args.tp is not None else 2, **kw)
     return Plan(tp=tp, **kw)
+
+
+def _print_list() -> None:
+    from .scenarios import DEFAULT_SCENARIOS
+
+    known = sorted(set(ARCH_IDS) | set(EXTRA_IDS))
+    print("registered scenarios:")
+    for line in DEFAULT_SCENARIOS.describe().splitlines():
+        print(f"  {line}")
+    print("\nknown archs:")
+    print("  " + " ".join(known))
 
 
 def _injector_of(spec: str):
@@ -115,7 +141,14 @@ def _injector_of(spec: str):
 
 def main(argv: Optional[list] = None) -> int:
     args = build_parser().parse_args(argv)
+    if args.list:
+        _print_list()
+        return EXIT_VERIFIED
     known = set(ARCH_IDS) | set(EXTRA_IDS)
+    if args.arch is None:
+        print("error: missing arch (try --list for scenarios and archs)",
+              file=sys.stderr)
+        return EXIT_USAGE
     if args.arch not in known:
         print(f"error: unknown arch {args.arch!r} "
               f"(known: {', '.join(sorted(known))})", file=sys.stderr)

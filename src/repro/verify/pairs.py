@@ -1,416 +1,75 @@
-"""Scenario graph-pair builders: trace the (baseline, per-device) program
-pair for one :class:`~repro.verify.plan.Scenario`.
+"""DEPRECATED shim: the scenario builders moved to
+``repro.verify.scenarios`` (a registry-driven subsystem mirroring the rule
+registry — one ~100-line module per parallelism axis over shared harness
+plumbing).
 
-This is the trace/stamp layer of the public API (moved here from
-``core/modelverify.py``, whose entry points are now thin shims):
-
-  * layers are unrolled under named scopes -> per-layer memoization fires;
-  * deep models are **layer-stamped** (``repro.core.stamp``): only
-    ``TRACE_PERIODS`` block periods are traced and the remaining layers are
-    cloned directly in the IR, so trace cost is O(block_period) instead of
-    O(n_layers).  ``VerifyOptions(stamp=False)`` disables this; any
-    non-periodic trace falls back to full tracing automatically;
-  * inner scans (attention KV chunks, SSD chunk recurrence) are unrolled so
-    the IR is plain dataflow (the paper's setting);
-  * the vocab-parallel embedding verifies through the trusted-template meta
-    rule; the vocab-parallel head through the column-dot rule;
-  * MoE layers use the dense-masked formulation with expert-FFN TP (the
-    capacity-dispatch execution path is data-dependent scatter/gather and is
-    covered by numerical equivalence tests instead — see DESIGN.md
-    §Arch-applicability).  DP scenarios skip MoE gating for the same
-    reason: the dense-mask construction scatters against *local* token ids.
+This module re-exports the stable names (``GraphPair``, ``build_pair``,
+``verify_pspecs``, ``round_layers``) and keeps the five legacy builder
+functions as deprecation wrappers; new code should go through
+``repro.verify.Session``/``Plan`` or register a scenario in
+``repro.verify.scenarios``.
 """
 from __future__ import annotations
 
-import dataclasses
-import time
-from dataclasses import dataclass
-from typing import Optional
+import warnings
 
-import jax
-import jax.numpy as jnp
-from jax.sharding import PartitionSpec as P
-
-from repro.compat import abstract_mesh
-from repro.configs import get_config
-from repro.core.ir import Graph
-from repro.core.stamp import TRACE_PERIODS, stamp_graph
-from repro.core.trace import LAYER_TAG_STRIDE, trace, trace_sharded
-from repro.core.verifier import OutputSpec
-from repro.models import Model
-from repro.models.model import _tree_index
-from repro.models.modules import rmsnorm
-from repro.parallel.ctx import ParallelCtx
-from repro.parallel.sharding import param_specs
-
-from .plan import DP_AXIS, TP_AXIS, Plan, PlanError, Scenario
-from .specs import spec_input_facts, spec_output_specs
+from .scenarios import GraphPair, build_pair  # noqa: F401  (stable re-exports)
+from .scenarios.harness import (  # noqa: F401  (stable re-exports)
+    batch_avals as _batch_avals_impl,
+    round_layers,
+    stamped_parts as _stamped_parts_impl,
+    verify_pspecs,
+)
+from .scenarios import dp as _dp
+from .scenarios import pipeline as _pipeline
+from .scenarios import tp as _tp
+from .scenarios.harness import BuildCtx as _BuildCtx
 
 
-@dataclass
-class GraphPair:
-    """A traced (baseline, distributed) pair plus its relation registration."""
-
-    base: Graph
-    dist: Graph
-    base_inputs: list
-    dist_inputs: list
-    input_facts: list
-    output_specs: list
-    size: int
-    axis: str
-    trace_s: float = 0.0
-    stamp_s: float = 0.0
-    stamped: bool = False
+def _warn(old: str, new: str) -> None:
+    warnings.warn(
+        f"repro.verify.pairs.{old} is deprecated; use {new}",
+        DeprecationWarning, stacklevel=3)
 
 
-def verify_pspecs(param_shapes, cfg):
-    """param specs for the verification formulation: like execution specs,
-    but MoE experts use FFN-width TP instead of expert parallelism."""
-    specs = param_specs(param_shapes)
-
-    def fix(path, spec, leaf):
-        names = tuple(p.key if hasattr(p, "key") else str(p) for p in path)
-        if len(names) >= 2 and names[-2] == "moe" and names[-1] in ("wg", "wu", "wo"):
-            if names[-1] == "wo":
-                return P(None, None, "model", None)  # (nb, E, F, D): shard F
-            return P(None, None, None, "model")  # (nb, E, D, F): shard F
-        return spec
-
-    return jax.tree_util.tree_map_with_path(
-        lambda pth, sp, lf: fix(pth, sp, lf), specs, param_shapes)
+def tp_forward_pair(arch, cfg, tp, batch, seq, stamp=True) -> GraphPair:
+    _warn("tp_forward_pair", "repro.verify.scenarios (kind 'tp-forward')")
+    return _tp.tp_forward_pair(arch, cfg, tp, batch, seq, stamp=stamp)
 
 
-def round_layers(cfg, n_layers: Optional[int], stages: int = 1):
-    """Round a layer-count override up to whole block periods (hybrids
-    repeat every P layers) and, for pipeline plans, to equal stages."""
-    if n_layers is None and stages <= 1:
-        return cfg
-    per = cfg.block_period
-    n_layers = cfg.n_layers if n_layers is None else n_layers
-    step = per * stages
-    n_layers = max(step, (n_layers + step - 1) // step * step)
-    return dataclasses.replace(cfg, n_layers=n_layers)
+def tp_decode_pair(arch, cfg, tp, batch, max_len, stamp=True) -> GraphPair:
+    _warn("tp_decode_pair", "repro.verify.scenarios (kind 'tp-decode')")
+    return _tp.tp_decode_pair(arch, cfg, tp, batch, max_len, stamp=stamp)
 
 
-def _batch_avals(cfg, model, batch: int, seq: int):
-    """ShapeDtypeStruct batch inputs for a forward trace (modality-aware).
-    Returns (b, seq) — vision frontends may grow seq."""
-    b = {}
-    if cfg.frontend == "vision_patches":
-        seq = max(seq, cfg.frontend_len + 32)
-        b["vision_embeds"] = jax.ShapeDtypeStruct(
-            (batch, cfg.frontend_len, cfg.frontend_dim), model.dtype)
-        b["tokens"] = jax.ShapeDtypeStruct((batch, seq - cfg.frontend_len), jnp.int32)
-    elif cfg.frontend == "audio_frames":
-        b["frames"] = jax.ShapeDtypeStruct((batch, seq, cfg.d_model), model.dtype)
-    else:
-        b["tokens"] = jax.ShapeDtypeStruct((batch, seq), jnp.int32)
-    return b, seq
+def dp_forward_pair(arch, cfg, dp, batch, seq) -> GraphPair:
+    _warn("dp_forward_pair", "repro.verify.scenarios (kind 'dp-forward')")
+    return _dp.dp_forward_pair(arch, cfg, dp, batch, seq)
 
 
-# --------------------------------------------------------------------- TP
-def _tp_forward_parts(arch: str, cfg, tp: int, batch: int, seq: int):
-    """Trace the (baseline, per-device) TP forward pair for ``cfg``."""
-    mesh = abstract_mesh((tp,), (TP_AXIS,))
-    ctx = ParallelCtx(tp_axis=TP_AXIS, tp_size=tp, ep_axis=TP_AXIS, ep_size=tp)
-    model_s = Model(cfg, ParallelCtx.single(), moe_impl="dense")
-    model_d = Model(cfg, ctx, moe_impl="dense")
-
-    key = jax.random.PRNGKey(0)
-    param_shapes = jax.eval_shape(model_s.init, key)
-    pspecs = verify_pspecs(param_shapes, cfg)
-    b, seq = _batch_avals(cfg, model_s, batch, seq)
-    bspecs = jax.tree_util.tree_map(lambda _: P(), b)
-
-    base_fn = lambda p, bb: model_s.forward(p, bb, unroll=True)
-    dist_fn = lambda p, bb: model_d.forward(p, bb, unroll=True)
-
-    gb, b_in, _ = trace(base_fn, param_shapes, b, name=f"{arch}-base")
-    gd, d_in, _ = trace_sharded(
-        dist_fn, mesh, (pspecs, bspecs), P(None, None, TP_AXIS),
-        param_shapes, b, name=f"{arch}-dist")
-    flat_specs = jax.tree_util.tree_leaves(
-        (pspecs, bspecs), is_leaf=lambda x: isinstance(x, P))
-    return gb, b_in, gd, d_in, flat_specs
+def dp_grad_pair(arch, cfg, dp, batch, seq) -> GraphPair:
+    _warn("dp_grad_pair", "repro.verify.scenarios (kind 'dp-grad')")
+    return _dp.dp_grad_pair(arch, cfg, dp, batch, seq)
 
 
-def _tp_decode_parts(arch: str, cfg, tp: int, batch: int, max_len: int):
-    """Trace the (baseline, per-device) decode-step pair for ``cfg``."""
-    from repro.parallel.sharding import cache_specs as _cache_specs
-
-    mesh = abstract_mesh((tp,), (TP_AXIS,))
-    ctx = ParallelCtx(tp_axis=TP_AXIS, tp_size=tp, ep_axis=TP_AXIS, ep_size=tp)
-    model_s = Model(cfg, ParallelCtx.single(), moe_impl="dense")
-    model_d = Model(cfg, ctx, moe_impl="dense")
-
-    key = jax.random.PRNGKey(0)
-    param_shapes = jax.eval_shape(model_s.init, key)
-    pspecs = verify_pspecs(param_shapes, cfg)
-    cache_shapes = jax.eval_shape(lambda: model_s.init_cache(batch, max_len))
-    cspecs = _cache_specs(cache_shapes, None)
-    tok = jax.ShapeDtypeStruct((batch,), jnp.int32)
-    pos = jax.ShapeDtypeStruct((), jnp.int32)
-
-    base_fn = lambda p, t, c, q: model_s.decode_step(p, t, c, q, unroll=True)
-    dist_fn = lambda p, t, c, q: model_d.decode_step(p, t, c, q, unroll=True)
-    gb, b_in, _ = trace(base_fn, param_shapes, tok, cache_shapes, pos,
-                        name=f"{arch}-decode-base")
-    gd, d_in, _ = trace_sharded(
-        dist_fn, mesh, (pspecs, P(), cspecs, P()),
-        (P(None, TP_AXIS), jax.tree_util.tree_map(lambda s: s, cspecs)),
-        param_shapes, tok, cache_shapes, pos, name=f"{arch}-decode-dist")
-    flat_specs = jax.tree_util.tree_leaves(
-        (pspecs, P(), cspecs, P()), is_leaf=lambda x: isinstance(x, P))
-    return gb, b_in, gd, d_in, (flat_specs, cspecs)
+def stage_pair(arch, cfg, tp, stage, stages, batch, seq) -> GraphPair:
+    _warn("stage_pair", "repro.verify.scenarios (kind 'stage')")
+    return _pipeline.stage_pair(arch, cfg, tp, stage, stages, batch, seq)
 
 
-def _stamped_parts(cfg, pair_fn, periods_per_block: int):
-    """Trace only TRACE_PERIODS block periods and stamp the rest, or None.
-
-    ``periods_per_block``: layer tags per period region (block_period for
-    forward traces whose periods span P layer scopes; 1 for decode traces
-    whose period is one outer block scope).  Returns ``(parts, stamp_s)``."""
-    total = cfg.n_layers // cfg.block_period
-    if total <= TRACE_PERIODS:
-        return None, 0.0
-    cfg_t = dataclasses.replace(
-        cfg, n_layers=TRACE_PERIODS * cfg.block_period)
-    gb, b_in, gd, d_in, flat_specs = pair_fn(cfg_t)
-    t0 = time.perf_counter()
-    stride = LAYER_TAG_STRIDE * periods_per_block
-    sb = stamp_graph(gb, total, lambda t: t // stride)
-    if sb is None:
-        return None, time.perf_counter() - t0
-    sd = stamp_graph(gd, total, lambda t: t // stride)
-    if sd is None:
-        return None, time.perf_counter() - t0
-    return (sb, b_in, sd, d_in, flat_specs), time.perf_counter() - t0
+# legacy private helpers (kept importable for one deprecation cycle;
+# repro.core.modelverify re-exposes them under their pre-package names)
+def _tp_forward_parts(arch, cfg, tp, batch, seq):
+    return _tp._tp_forward_parts(arch, cfg, tp, batch, seq, _BuildCtx())
 
 
-def tp_forward_pair(arch: str, cfg, tp: int, batch: int, seq: int,
-                    stamp: bool = True) -> GraphPair:
-    t0 = time.perf_counter()
-    pair_fn = lambda c: _tp_forward_parts(arch, c, tp, batch, seq)
-    parts, stamp_s = (_stamped_parts(cfg, pair_fn, cfg.block_period)
-                      if stamp else (None, 0.0))
-    stamped = parts is not None
-    if parts is None:
-        parts = pair_fn(cfg)
-    gb, b_in, gd, d_in, flat_specs = parts
-    trace_s = time.perf_counter() - t0 - stamp_s
-    return GraphPair(
-        gb, gd, b_in, d_in,
-        input_facts=spec_input_facts(flat_specs, axis=TP_AXIS),
-        output_specs=[OutputSpec(kind="shard", dim=2)],
-        size=tp, axis=TP_AXIS,
-        trace_s=trace_s, stamp_s=stamp_s, stamped=stamped)
+def _tp_decode_parts(arch, cfg, tp, batch, max_len):
+    return _tp._tp_decode_parts(arch, cfg, tp, batch, max_len, _BuildCtx())
 
 
-def tp_decode_pair(arch: str, cfg, tp: int, batch: int, max_len: int,
-                   stamp: bool = True) -> GraphPair:
-    """The paper's own setting (inference graphs): one token against KV/SSM
-    caches sharded over heads, vocab-parallel head output."""
-    if cfg.encoder_only:
-        raise PlanError(f"{arch} is encoder-only: no decode step")
-    t0 = time.perf_counter()
-    # one decode period = one outer block scope (P sub-layers)
-    pair_fn = lambda c: _tp_decode_parts(arch, c, tp, batch, max_len)
-    parts, stamp_s = (_stamped_parts(cfg, pair_fn, 1)
-                      if stamp else (None, 0.0))
-    stamped = parts is not None
-    if parts is None:
-        parts = pair_fn(cfg)
-    gb, b_in, gd, d_in, (flat_specs, cspecs) = parts
-    trace_s = time.perf_counter() - t0 - stamp_s
-
-    # outputs: logits sharded over vocab (dim 1) + every cache leaf sharded
-    # on its head dim (matching the input cache specs)
-    cache_leaves = jax.tree_util.tree_leaves(
-        cspecs, is_leaf=lambda x: isinstance(x, P))
-    out_specs = ([OutputSpec(kind="shard", dim=1)]
-                 + spec_output_specs(cache_leaves, axis=TP_AXIS))
-    return GraphPair(
-        gb, gd, b_in, d_in,
-        input_facts=spec_input_facts(flat_specs, axis=TP_AXIS),
-        output_specs=out_specs,
-        size=tp, axis=TP_AXIS,
-        trace_s=trace_s, stamp_s=stamp_s, stamped=stamped)
+def _batch_avals(cfg, model, batch, seq):
+    return _batch_avals_impl(cfg, model, batch, seq)
 
 
-# --------------------------------------------------------------------- DP
-def _dp_models(cfg, dp: int):
-    model_s = Model(cfg, ParallelCtx.single(), moe_impl="dense")
-    model_d = Model(cfg, ParallelCtx(dp_axis=(DP_AXIS,), dp_size=dp),
-                    moe_impl="dense")
-    param_shapes = jax.eval_shape(model_s.init, jax.random.PRNGKey(0))
-    pspecs = jax.tree_util.tree_map(lambda _: P(), param_shapes)
-    return model_s, model_d, param_shapes, pspecs
-
-
-def dp_forward_pair(arch: str, cfg, dp: int, batch: int, seq: int) -> GraphPair:
-    """Batch-sharded forward equivalence over the data axis: params
-    replicated, inputs sharded on dim 0, logits sharded on dim 0 — proves
-    the model has no improper cross-batch interaction under DP."""
-    if cfg.n_experts:
-        raise PlanError(
-            f"{arch}: dense-masked MoE gating scatters against local token "
-            f"ids — DP plans for MoE archs are covered by numerical tests")
-    if batch % dp:
-        raise PlanError(f"batch={batch} not divisible by dp={dp}")
-    t0 = time.perf_counter()
-    mesh = abstract_mesh((dp,), (DP_AXIS,))
-    model_s, model_d, param_shapes, pspecs = _dp_models(cfg, dp)
-    b, seq = _batch_avals(cfg, model_s, batch, seq)
-    bspecs = jax.tree_util.tree_map(lambda _: P(DP_AXIS), b)
-
-    base_fn = lambda p, bb: model_s.forward(p, bb, unroll=True)
-    dist_fn = lambda p, bb: model_d.forward(p, bb, unroll=True)
-    gb, b_in, _ = trace(base_fn, param_shapes, b, name=f"{arch}-dp-base")
-    gd, d_in, _ = trace_sharded(
-        dist_fn, mesh, (pspecs, bspecs), P(DP_AXIS),
-        param_shapes, b, name=f"{arch}-dp-dist")
-    flat_specs = jax.tree_util.tree_leaves(
-        (pspecs, bspecs), is_leaf=lambda x: isinstance(x, P))
-    return GraphPair(
-        gb, gd, b_in, d_in,
-        input_facts=spec_input_facts(flat_specs, axis=DP_AXIS),
-        output_specs=[OutputSpec(kind="shard", dim=0)],
-        size=dp, axis=DP_AXIS,
-        trace_s=time.perf_counter() - t0)
-
-
-def dp_grad_pair(arch: str, cfg, dp: int, batch: int, seq: int) -> GraphPair:
-    """The DP gradient-sync contract: per-device gradients of the local
-    sum-loss, all-reduced over the data axis, must equal the full-batch
-    gradients.  Sum-loss (not mean) keeps both sides free of batch-size
-    constants — the mean/`1/dp` rescaling is pure scalar algebra applied
-    identically by the trainer on both sides."""
-    if cfg.n_experts:
-        raise PlanError(
-            f"{arch}: dense-masked MoE gating scatters against local token "
-            f"ids — DP plans for MoE archs are covered by numerical tests")
-    if batch % dp:
-        raise PlanError(f"batch={batch} not divisible by dp={dp}")
-    t0 = time.perf_counter()
-    mesh = abstract_mesh((dp,), (DP_AXIS,))
-    model_s, model_d, param_shapes, pspecs = _dp_models(cfg, dp)
-    b, seq = _batch_avals(cfg, model_s, batch, seq)
-    bspecs = jax.tree_util.tree_map(lambda _: P(DP_AXIS), b)
-
-    def base_fn(p, bb):
-        return jax.grad(
-            lambda q: model_s.forward(q, bb, unroll=True)
-            .astype(jnp.float32).sum())(p)
-
-    def dist_fn(p, bb):
-        g = jax.grad(
-            lambda q: model_d.forward(q, bb, unroll=True)
-            .astype(jnp.float32).sum())(p)
-        return jax.tree_util.tree_map(lambda a: jax.lax.psum(a, DP_AXIS), g)
-
-    gb, b_in, _ = trace(base_fn, param_shapes, b, name=f"{arch}-grad-base")
-    gd, d_in, _ = trace_sharded(
-        dist_fn, mesh, (pspecs, bspecs),
-        jax.tree_util.tree_map(lambda _: P(), param_shapes),
-        param_shapes, b, name=f"{arch}-grad-dist")
-    flat_specs = jax.tree_util.tree_leaves(
-        (pspecs, bspecs), is_leaf=lambda x: isinstance(x, P))
-    n_out = len(jax.tree_util.tree_leaves(param_shapes))
-    return GraphPair(
-        gb, gd, b_in, d_in,
-        input_facts=spec_input_facts(flat_specs, axis=DP_AXIS),
-        output_specs=[OutputSpec(kind="dup")] * n_out,
-        size=dp, axis=DP_AXIS,
-        trace_s=time.perf_counter() - t0)
-
-
-# --------------------------------------------------------------- pipeline
-def stage_pair(arch: str, cfg, tp: int, stage: int, stages: int,
-               batch: int, seq: int) -> GraphPair:
-    """Pipeline stage ``stage`` of ``stages`` verified in isolation: the
-    stage's layer slice (plus embedding frontend on stage 0 and final
-    norm + head on the last stage) with TP sharding inside the stage.
-    Stage boundaries are replicated hidden states — exactly what
-    ``parallel/pipeline.py`` ships over its ppermute ring — so per-stage
-    equivalence composes to whole-pipeline equivalence."""
-    if cfg.n_layers % stages:
-        raise PlanError(
-            f"{arch}: n_layers={cfg.n_layers} not divisible by "
-            f"stages={stages} (pass layers=... to round)")
-    per_stage = cfg.n_layers // stages
-    lo, hi = stage * per_stage, (stage + 1) * per_stage
-    first, last = stage == 0, stage == stages - 1
-
-    t0 = time.perf_counter()
-    mesh = abstract_mesh((tp,), (TP_AXIS,))
-    ctx = ParallelCtx(tp_axis=TP_AXIS, tp_size=tp, ep_axis=TP_AXIS, ep_size=tp)
-    model_s = Model(cfg, ParallelCtx.single(), moe_impl="dense")
-    model_d = Model(cfg, ctx, moe_impl="dense")
-    param_shapes = jax.eval_shape(model_s.init, jax.random.PRNGKey(0))
-    pspecs = verify_pspecs(param_shapes, cfg)
-    b, seq = _batch_avals(cfg, model_s, batch, seq)
-    Pnum = cfg.block_period
-
-    def stage_fn(model):
-        def run(params, x_or_batch):
-            if first:
-                x = model._inputs_to_hidden(params, x_or_batch)
-            else:
-                x = x_or_batch
-            positions = jnp.arange(seq)
-            for l in range(lo, hi):
-                with jax.named_scope(f"layer{l}"):
-                    lp = _tree_index(params["blocks"][l % Pnum], l // Pnum)
-                    x = model._layer_fwd(lp, x, positions, l % Pnum, unroll=True)
-            if last:
-                x = model.ctx.sp_exit(x)
-                x = rmsnorm(params["ln_f"], x, cfg.norm_eps)
-                return model._head(params, x)
-            return x
-
-        return run
-
-    if first:
-        x_aval = b
-        xspec = jax.tree_util.tree_map(lambda _: P(), b)
-    else:
-        x_aval = jax.ShapeDtypeStruct((batch, seq, cfg.d_model), model_s.dtype)
-        xspec = P()
-    out_spec = P(None, None, TP_AXIS) if last else P()
-
-    gb, b_in, _ = trace(stage_fn(model_s), param_shapes, x_aval,
-                        name=f"{arch}-stage{stage}-base")
-    gd, d_in, _ = trace_sharded(
-        stage_fn(model_d), mesh, (pspecs, xspec), out_spec,
-        param_shapes, x_aval, name=f"{arch}-stage{stage}-dist")
-    flat_specs = jax.tree_util.tree_leaves(
-        (pspecs, xspec), is_leaf=lambda x: isinstance(x, P))
-    return GraphPair(
-        gb, gd, b_in, d_in,
-        input_facts=spec_input_facts(flat_specs, axis=TP_AXIS),
-        output_specs=[OutputSpec(kind="shard", dim=2) if last
-                      else OutputSpec(kind="dup")],
-        size=tp, axis=TP_AXIS,
-        trace_s=time.perf_counter() - t0)
-
-
-# ------------------------------------------------------------------ entry
-def build_pair(arch: str, plan: Plan, scen: Scenario,
-               stamp: bool = True) -> GraphPair:
-    """Build the graph pair for one scenario of a plan."""
-    cfg = round_layers(get_config(arch, smoke=plan.smoke), plan.layers,
-                       stages=plan.stages)
-    batch = plan.scenario_batch(scen)
-    if scen.kind == "tp-forward":
-        return tp_forward_pair(arch, cfg, scen.size, batch, plan.seq, stamp=stamp)
-    if scen.kind == "tp-decode":
-        return tp_decode_pair(arch, cfg, scen.size, batch, plan.max_len, stamp=stamp)
-    if scen.kind == "dp-forward":
-        return dp_forward_pair(arch, cfg, scen.size, batch, plan.seq)
-    if scen.kind == "dp-grad":
-        return dp_grad_pair(arch, cfg, scen.size, batch, plan.seq)
-    if scen.kind == "stage":
-        return stage_pair(arch, cfg, scen.size, scen.stage, plan.stages,
-                          batch, plan.seq)
-    raise PlanError(f"unknown scenario kind {scen.kind!r}")
+def _stamped_parts(cfg, pair_fn, periods_per_block):
+    return _stamped_parts_impl(cfg, pair_fn, periods_per_block)

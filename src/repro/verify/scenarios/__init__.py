@@ -1,0 +1,54 @@
+"""repro.verify.scenarios — the registry-driven scenario subsystem.
+
+Every parallelism axis the verifier covers is one registered
+:class:`~repro.verify.scenarios.registry.ScenarioSpec`: a builder declaring
+its mesh axis, aval construction and base/distributed trace functions once,
+over the shared trace/stamp/spec plumbing in :mod:`.harness`.  The
+:class:`~repro.verify.plan.Plan` expands composable axis specs
+(``Plan(tp=8, sp=True)``, ``Plan(ep=4)``, ``Plan(tp=4, dp=2,
+composite=True)``) into scenario kinds resolved here.
+
+Registered kinds (see ``python -m repro.verify --list``):
+
+``tp-forward``     baseline forward vs TP/EP-sharded per-device forward
+``tp-decode``      one serving step against head-sharded KV/SSM caches
+``dp-forward``     batch-sharded forward (cross-batch interaction)
+``dp-grad``        per-device sum-loss grads + psum vs full-batch grads
+``stage``          one pipeline stage in isolation (TP inside the stage)
+``sp-forward``     sequence-parallel forward (reduce_scatter/all_gather)
+``ep-moe-forward`` expert-parallel MoE forward (unrolled expert slice loop)
+``tpdp-forward``   tp x dp composite: 2D program vs the 1D TP program
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+from repro.configs import get_config
+
+from ..plan import Plan, Scenario
+from .harness import BuildCtx, GraphPair, round_layers, verify_pspecs
+from .registry import DEFAULT_SCENARIOS, ScenarioRegistry, ScenarioSpec
+
+# importing the scenario modules populates DEFAULT_SCENARIOS
+from . import tp, dp, pipeline, sp, ep, composite  # noqa: E402,F401
+
+
+def build_pair(arch: str, plan: Plan, scen: Scenario, stamp: bool = True,
+               base_cache: Optional[dict] = None,
+               base_key: tuple = ()) -> GraphPair:
+    """Build the graph pair for one scenario of a plan via the registry.
+
+    ``base_cache``/``base_key`` are the session's shared base-trace store
+    (scenarios of one plan reuse a base trace when program + avals match).
+    """
+    spec = DEFAULT_SCENARIOS.get(scen.kind)
+    cfg = round_layers(get_config(arch, smoke=plan.smoke), plan.layers,
+                       stages=plan.stages)
+    ctx = BuildCtx(stamp=stamp, base_cache=base_cache, base_key=base_key)
+    return spec.builder(arch, cfg, plan, scen, ctx)
+
+
+__all__ = [
+    "BuildCtx", "DEFAULT_SCENARIOS", "GraphPair", "ScenarioRegistry",
+    "ScenarioSpec", "build_pair", "round_layers", "verify_pspecs",
+]

@@ -33,8 +33,8 @@ from repro.core.partition import TemplateCache
 from repro.core.report import CacheStats, PhaseTimings, Report, rank_bug_sites
 from repro.core.verifier import VerifyOptions, verify_graphs
 
-from .pairs import GraphPair, build_pair
 from .plan import Plan, Scenario
+from .scenarios import GraphPair, build_pair
 
 __all__ = ["Session", "verify"]
 
@@ -58,6 +58,11 @@ class Session:
         self.options = options
         self._graphs: dict[tuple, GraphPair] = {}
         self._templates: dict[tuple, TemplateCache] = {}
+        # base (single-device) traces shared ACROSS scenarios: keyed on
+        # (arch/cfg, program tag, aval signature) — not the scenario name —
+        # so e.g. tp-forward and sp-forward of one plan trace the baseline
+        # once (Report.cache.base_trace_cached)
+        self._base_traces: dict[tuple, tuple] = {}
         self._pool: Optional[_fut.ThreadPoolExecutor] = None
         self._pool_size = 0
 
@@ -78,11 +83,13 @@ class Session:
         """Drop all cached graphs and templates (keep the pool)."""
         self._graphs.clear()
         self._templates.clear()
+        self._base_traces.clear()
 
     def stats(self) -> dict:
         return {
             "cached_graphs": len(self._graphs),
             "cached_templates": len(self._templates),
+            "cached_base_traces": len(self._base_traces),
             "pool_workers": self._pool_size,
         }
 
@@ -104,7 +111,9 @@ class Session:
 
         ``mutate_dist`` (testing/bug-injection hook) receives each
         scenario's distributed graph and returns the mutated graph; mutated
-        runs bypass every session cache."""
+        runs bypass the graph-pair and template caches (mutation acts on a
+        fresh copy, so the shared *base-trace* cache stays in use — it
+        holds only unmutated traces)."""
         if plan is not None and plan_kw:
             raise TypeError(
                 f"pass either a Plan or plan keywords, not both "
@@ -125,12 +134,14 @@ class Session:
     def _run_scenario(self, arch: str, cfg_h: str, plan: Plan, scen: Scenario,
                       options: VerifyOptions, mutate_dist) -> Report:
         key = (arch, cfg_h, scen.name, scen.size, plan.layers, plan.batch,
-               plan.seq, plan.max_len, plan.stages, options.stamp)
+               plan.seq, plan.max_len, plan.stages, plan.tp, options.stamp)
         cached = key in self._graphs and mutate_dist is None
         if cached:
             pair = self._graphs[key]
         else:
-            pair = build_pair(arch, plan, scen, stamp=options.stamp)
+            pair = build_pair(arch, plan, scen, stamp=options.stamp,
+                              base_cache=self._base_traces,
+                              base_key=(arch, cfg_h))
             if mutate_dist is None:
                 self._graphs[key] = pair
         dist = pair.dist
@@ -157,6 +168,7 @@ class Session:
             timings=timings,
         )
         rep.cache.trace_cached = cached
+        rep.cache.base_trace_cached = pair.base_cached
         return rep
 
     # ------------------------------------------------- function-pair entry
@@ -187,6 +199,7 @@ def _merge(arch: str, plan: Plan, results) -> Report:
             "unverified_count": rep.unverified_count,
             "elapsed_s": rep.elapsed_s,
             "trace_cached": rep.cache.trace_cached,
+            "base_trace_cached": rep.cache.base_trace_cached,
             "fp_cached": rep.cache.fp_cached,
         }
         for scen, rep in results
@@ -217,6 +230,7 @@ def _merge(arch: str, plan: Plan, results) -> Report:
             ),
             cache=CacheStats(
                 trace_cached=all(r.cache.trace_cached for r in reps),
+                base_trace_cached=any(r.cache.base_trace_cached for r in reps),
                 fp_cached=sum(r.cache.fp_cached for r in reps),
                 memo_hits=sum(r.cache.memo_hits for r in reps),
                 facts_replayed=sum(r.cache.facts_replayed for r in reps),

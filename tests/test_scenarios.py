@@ -1,0 +1,240 @@
+"""The registry-driven scenario subsystem: composable Plan axes, the three
+new scenarios (sp-forward, ep-moe-forward, tpdp-forward) verifying clean and
+catching injected bugs with localized BugSites, base-trace sharing across
+scenarios of one plan, registry lookup errors, and the pairs.py shim."""
+import pytest
+
+from repro.core.inject import drop_all_reduce, wrong_all_gather_dim, wrong_scatter_dim
+from repro.verify import (
+    DEFAULT_SCENARIOS,
+    Plan,
+    PlanError,
+    Scenario,
+    Session,
+    verify,
+)
+from repro.verify.cli import main as cli_main
+
+ARCH = "qwen3_4b"
+MOE_ARCH = "mixtral_8x7b"
+TP = 4
+
+
+# --------------------------------------------------------------- registry
+def test_registry_covers_all_plan_kinds():
+    kinds = set(DEFAULT_SCENARIOS.kinds())
+    assert {"tp-forward", "tp-decode", "dp-forward", "dp-grad", "stage",
+            "sp-forward", "ep-moe-forward", "tpdp-forward"} <= kinds
+
+
+def test_registry_unknown_kind_is_plan_error():
+    with pytest.raises(PlanError, match="unknown scenario"):
+        DEFAULT_SCENARIOS.get("zz-forward")
+
+
+def test_registry_double_registration_rejected():
+    with pytest.raises(ValueError, match="twice"):
+        DEFAULT_SCENARIOS.scenario("tp-forward", "model")(lambda *a: None)
+
+
+def test_registry_describe_lists_docs():
+    text = DEFAULT_SCENARIOS.describe()
+    assert "sp-forward" in text and "ep-moe-forward" in text
+
+
+# ------------------------------------------------------- plan composition
+@pytest.mark.parametrize("kw", [
+    dict(tp=1, sp=True),               # sp needs a tp axis
+    dict(tp=4, sp=True, mode="decode"),
+    dict(ep=0),
+    dict(ep=4, mode="grad", dp=2),     # ep composes with forward only
+    dict(tp=4, composite=True),        # composite needs dp too
+    dict(dp=2, composite=True),        # ... and tp
+    dict(tp=4, dp=2, composite=True, sp=True),  # sp breaks the chain arg
+    dict(tp=1, dp=1, ep=1),            # nothing to verify
+])
+def test_plan_axis_validation_errors(kw):
+    with pytest.raises(PlanError):
+        Plan(**kw)
+
+
+def test_plan_axis_expansion():
+    assert [s.name for s in Plan(tp=8, sp=True).scenarios()] == ["sp-forward"]
+    assert [s.name for s in Plan(ep=4).scenarios()] == ["ep-moe-forward"]
+    assert [s.name for s in Plan(tp=8, ep=8).scenarios()] == [
+        "tp-forward", "ep-moe-forward"]
+    assert [s.name for s in Plan(tp=4, dp=2, composite=True).scenarios()] == [
+        "tp-forward", "tpdp-forward"]
+    assert [s.name for s in Plan(tp=4, dp=2).scenarios()] == [
+        "tp-forward", "dp-forward"]
+    assert Plan(tp=8, sp=True).describe() == "tp8+sp-forward"
+    assert Plan(ep=4).describe() == "ep4-forward"
+    assert Plan(tp=4, dp=2, composite=True).describe() == "tp4+dp2x-forward"
+
+
+def test_plan_round_trips_through_dict():
+    p = Plan(tp=4, dp=2, composite=True, seq=16)
+    assert Plan(**{k: v for k, v in p.to_dict().items()
+                   if v is not None or k in ("layers", "batch")}) == p
+
+
+# ------------------------------------------------------------- sp-forward
+def test_sp_forward_verifies_and_catches_bugs():
+    with Session() as s:
+        plan = Plan(tp=TP, sp=True, layers=2)
+        good = s.verify(ARCH, plan)
+        assert good.verified, good.summary()
+        assert good.scenarios[0]["scenario"] == "sp-forward"
+        # wrong all_gather dim on an sp_exit gather: silent layout bug
+        bad = s.verify(ARCH, plan, mutate_dist=lambda gd:
+                       wrong_all_gather_dim(gd, index=0).graph)
+        assert not bad.verified and bad.bug_sites
+        # wrong reduce_scatter dim on an sp_enter scatter
+        bad2 = s.verify(ARCH, plan, mutate_dist=lambda gd:
+                        wrong_scatter_dim(gd, index=1).graph)
+        assert not bad2.verified and bad2.bug_sites
+        assert bad2.bug_sites[0].src  # localized to a source site
+
+
+def test_sp_forward_seq_divisibility_checked():
+    with pytest.raises(PlanError, match="seq"):
+        verify(ARCH, Plan(tp=TP, sp=True, layers=2, seq=30))
+
+
+# --------------------------------------------------------- ep-moe-forward
+def test_ep_moe_forward_verifies_and_catches_bugs():
+    with Session() as s:
+        plan = Plan(ep=4, layers=2)
+        good = s.verify(MOE_ARCH, plan)
+        assert good.verified, good.summary()
+        assert good.scenarios[0]["scenario"] == "ep-moe-forward"
+        # dropping the expert-axis all_reduce leaves the accumulation partial
+        bad = s.verify(MOE_ARCH, plan, mutate_dist=lambda gd:
+                       drop_all_reduce(gd, index=0).graph)
+        assert not bad.verified and bad.bug_sites
+
+
+def test_ep_moe_forward_exercises_loopred_slicegrp():
+    """The EP scenario must discharge through the LOOPRED/SLICEGRP relation
+    family (paper Fig. 8), not merely congruence."""
+    from repro.core.relations import LOOPRED, SLICEGRP
+    from repro.core.rules import Propagator
+    from repro.verify.plan import TP_AXIS
+    from repro.verify.scenarios import build_pair
+
+    plan = Plan(ep=4, layers=2)
+    pair = build_pair(MOE_ARCH, plan, Scenario("ep-moe-forward", TP_AXIS, 4))
+    p = Propagator(pair.base, pair.dist, 4)
+    for f in pair.input_facts:
+        b, d = pair.base_inputs[f.base_index], pair.dist_inputs[f.dist_index]
+        if f.kind == "dup":
+            p.register_dup(b, d)
+        else:
+            p.register_shard(b, d, f.dim)
+    p.run()
+    kinds = {f.kind for facts in p.store.by_dist.values() for f in facts}
+    assert SLICEGRP in kinds and LOOPRED in kinds
+
+
+def test_ep_rejects_dense_arch_and_bad_degree():
+    with pytest.raises(PlanError, match="no experts"):
+        verify(ARCH, Plan(ep=4, layers=2))
+    with pytest.raises(PlanError, match="not divisible"):
+        verify(MOE_ARCH, Plan(ep=3, layers=2))
+
+
+# ----------------------------------------------------------- tpdp-forward
+def test_composite_verifies_and_catches_bugs():
+    with Session() as s:
+        plan = Plan(tp=TP, dp=2, composite=True, layers=2)
+        good = s.verify(ARCH, plan)
+        assert good.verified, good.summary()
+        assert [r["scenario"] for r in good.scenarios] == [
+            "tp-forward", "tpdp-forward"]
+        # dropping a model-axis psum desyncs the 2D program from the TP
+        # baseline: the composite row must flag it
+        bad = s.verify(ARCH, plan, mutate_dist=lambda gd:
+                       drop_all_reduce(gd, index=1).graph)
+        assert not bad.verified and bad.bug_sites
+        rows = {r["scenario"]: r["verified"] for r in bad.scenarios}
+        assert not rows["tpdp-forward"]
+
+
+def test_composite_rejects_moe():
+    with pytest.raises(PlanError, match="MoE"):
+        verify(MOE_ARCH, Plan(tp=2, dp=2, composite=True, layers=2, batch=2))
+
+
+# ------------------------------------------------------ base-trace sharing
+def test_base_trace_shared_across_scenarios():
+    """tp-forward and sp-forward trace the same baseline program over the
+    same avals: the second scenario must reuse the session's base trace
+    (cache keyed on (arch, aval signature), not scenario name)."""
+    with Session() as s:
+        cold = s.verify(ARCH, Plan(tp=TP, layers=2))
+        shared = s.verify(ARCH, Plan(tp=TP, sp=True, layers=2))
+    assert not cold.cache.base_trace_cached
+    assert not cold.cache.trace_cached
+    assert shared.cache.base_trace_cached, "sp-forward re-traced the baseline"
+    assert not shared.cache.trace_cached  # the *pair* is new, only base hits
+    assert shared.scenarios[0]["base_trace_cached"]
+    assert s.stats()["cached_base_traces"] >= 1
+
+
+def test_base_trace_share_preserves_verdict_and_facts():
+    with Session() as s:
+        shared = s.verify(ARCH, Plan(tp=TP, layers=2))
+        shared_sp = s.verify(ARCH, Plan(tp=TP, sp=True, layers=2))
+    solo_sp = verify(ARCH, Plan(tp=TP, sp=True, layers=2))
+    assert shared_sp.verified and solo_sp.verified
+    assert shared_sp.num_facts == solo_sp.num_facts
+    assert shared_sp.num_base_nodes == solo_sp.num_base_nodes
+
+
+# ------------------------------------------------------------------- CLI
+def test_cli_list_exits_zero(capsys):
+    assert cli_main(["--list"]) == 0
+    out = capsys.readouterr().out
+    assert "sp-forward" in out and "ep-moe-forward" in out
+    assert "mixtral_8x7b" in out
+
+
+def test_cli_missing_arch_exits_two(capsys):
+    assert cli_main([]) == 2
+
+
+def test_cli_new_axis_flags():
+    assert cli_main([ARCH, "--tp", str(TP), "--sp", "--layers", "2",
+                     "--quiet"]) == 0
+    assert cli_main([MOE_ARCH, "--ep", "4", "--layers", "2", "--quiet"]) == 0
+    # unknown-scenario-shaped errors exit 2 with the available set
+    assert cli_main([ARCH, "--ep", "4", "--layers", "2", "--quiet"]) == 2
+    assert cli_main([ARCH, "--tp", str(TP), "--sp", "--decode",
+                     "--quiet"]) == 2
+    assert cli_main([ARCH, "--tp", str(TP), "--dp", "2", "--composite",
+                     "--layers", "2", "--quiet"]) == 0
+
+
+# ------------------------------------------------------------ pairs shim
+def test_pairs_shim_warns_and_matches_registry():
+    from repro.configs import get_config
+    from repro.verify import pairs
+    from repro.verify.scenarios import round_layers
+
+    cfg = round_layers(get_config(ARCH), 2)
+    with pytest.warns(DeprecationWarning):
+        pair = pairs.tp_forward_pair(ARCH, cfg, TP, 1, 32)
+    assert pair.size == TP and pair.axis == "model"
+    # stable re-exports stay warning-free
+    assert pairs.build_pair is not None and pairs.GraphPair is not None
+
+
+def test_legacy_scenarios_verdict_parity():
+    """The five pre-existing scenario kinds keep their verdicts through the
+    registry refactor."""
+    with Session() as s:
+        assert s.verify(ARCH, Plan(tp=TP, layers=2)).verified
+        assert s.verify(ARCH, Plan.decode(tp=TP, layers=2)).verified
+        assert s.verify(ARCH, Plan(dp=2, layers=2)).verified
+        assert s.verify(ARCH, Plan.grad(dp=2, layers=2, seq=8)).verified
+        assert s.verify(ARCH, Plan.pipeline(stages=2, tp=TP, layers=4)).verified
