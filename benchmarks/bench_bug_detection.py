@@ -1,67 +1,56 @@
 """Paper Tables 4/5: silent-error detection + localization.
 
-Injects the five bug categories (9 injector templates) into the *real*
-llama3_8b TP-16 distributed graph (and a Megatron-MLP stack for collective-
-heavy variants) and reports detection + localization rates."""
+Drives the detection-benchmark campaign (:mod:`repro.verify.campaign`)
+over the real llama3_8b TP-16 graph: every registered injector through a
+shared warm Session (one trace, N injected cells), reporting per-injector
+detection + localization and the campaign aggregates.  A fuzz sweep row
+covers the seeded metamorphic generator (graphs no hand-written scenario
+anticipated)."""
 from __future__ import annotations
 
-import time
-
-import jax
-import jax.numpy as jnp
-from jax.sharding import AbstractMesh, PartitionSpec as P
-
-from repro.core import inject_all, trace, trace_sharded, verify_graphs
-from repro.core.relations import DUP, SHARD
-from repro.core.verifier import InputFact
-from repro.verify import Plan, verify
-
-
-def _model_graph_suite() -> list[dict]:
-    """Inject into the real llama3_8b 2-layer TP graph via mutate_dist."""
-    out = []
-    from repro.core.inject import ALL_INJECTORS
-
-    for injector in ALL_INJECTORS:
-        holder = {}
-
-        def mutate(gd, injector=injector, holder=holder):
-            # index=1 targets layer code (exact-line ➤); index=0 falls back
-            # to the embedding region (function-level ★, like paper Bugs#3-8)
-            inj = injector(gd, index=1) or injector(gd)
-            holder["inj"] = inj
-            return inj.graph if inj else gd
-
-        t0 = time.perf_counter()
-        # batch=2: at batch 1 several layout mutations are unit-dim no-ops
-        # that the verifier CORRECTLY accepts (effectively-identity layouts)
-        rep = verify("llama3_8b", Plan(tp=16, layers=2, seq=32, batch=2),
-                     mutate_dist=mutate)
-        dt = time.perf_counter() - t0
-        inj = holder.get("inj")
-        if inj is None:
-            continue
-        detected = not rep.verified
-        localized = any(b.src == inj.site for b in rep.bug_sites)
-        categorized = any(b.category == inj.category for b in rep.bug_sites)
-        localized = localized or categorized  # removed-node bugs flag the consumer
-        out.append({
-            "name": f"table45_{inj.name.split('@')[0]}",
-            "us_per_call": dt * 1e6,
-            "derived": f"detected={detected} localized={localized} "
-                       f"category_match={categorized} site={inj.site}",
-        })
-    return out
+from repro.verify.campaign import run_campaign
 
 
 def run() -> list[dict]:
-    rows = _model_graph_suite()
-    det = sum("detected=True" in r["derived"] for r in rows)
-    loc = sum("localized=True" in r["derived"] for r in rows)
+    rep = run_campaign(["llama3_8b"], tp=16, layers=2,
+                       scenarios=["tp-forward"], fuzz_seeds=range(10))
+    rows = []
+    for c in rep.cells:
+        if not c.injector:
+            continue
+        detected = c.outcome in ("detected", "mislocalized")
+        rows.append({
+            "name": f"table45_{c.injector}",
+            "us_per_call": c.elapsed_s * 1e6,
+            "derived": (f"outcome={c.outcome} detected={detected} "
+                        f"localized={c.localized} "
+                        f"category_match={c.category_match} site={c.site}"),
+        })
+    # campaign-cell-only counts: the fuzz sweep reports separately below
+    ran = [c for c in rep.cells if c.injector and c.outcome != "skipped"]
+    det = sum(1 for c in ran if c.outcome in ("detected", "mislocalized"))
+    loc = sum(1 for c in ran if c.localized)
+    fps = sum(1 for c in rep.cells if c.outcome == "false_positive")
     rows.append({
         "name": "table45_summary",
         "us_per_call": 0.0,
-        "derived": f"detected={det}/{len(rows)} localized={loc}/{len(rows)}",
+        "derived": (f"detected={det}/{len(ran)} localized={loc}/{len(ran)} "
+                    f"false_positives={fps}"),
+    })
+    fuzz_det = sum(1 for f in rep.fuzz if f.injected_outcome == "detected")
+    fuzz_inj = sum(1 for f in rep.fuzz if f.injected_outcome != "skipped")
+    rows.append({
+        "name": "campaign_fuzz_sweep",
+        "us_per_call": sum(f.elapsed_s for f in rep.fuzz) * 1e6,
+        "derived": (f"seeds={len(rep.fuzz)} "
+                    f"clean={sum(1 for f in rep.fuzz if f.clean_outcome == 'clean_pass')}"
+                    f"/{len(rep.fuzz)} detected={fuzz_det}/{fuzz_inj}"),
+    })
+    rows.append({
+        "name": "campaign_gate",
+        "us_per_call": rep.elapsed_s * 1e6,
+        "derived": (f"ok={rep.ok} detection_rate={rep.detection_rate:.2f} "
+                    f"localization_rate={rep.localization_rate:.2f}"),
     })
     return rows
 

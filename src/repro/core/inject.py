@@ -6,6 +6,19 @@ plus metadata (description, expected diagnostic category, injected site).
 The mutations mirror real-world bugs: missing/redundant all-reduce, wrong
 replica groups, swapped reshape dims (the BSH bug of Fig. 1), wrong transpose,
 precision drop, wrong all-gather dim, wrong all-to-all axes, shifted slices.
+
+Injectors are registered in :data:`DEFAULT_INJECTORS` (an
+:class:`InjectorRegistry` mirroring the rule and scenario registries) with
+their bug category, mutated-op applicability predicate, and a one-line
+description — the detection-benchmark campaign
+(:mod:`repro.verify.campaign`) sweeps the registry across scenarios, and
+``python -m repro.verify --list-injectors`` enumerates it.  Calling the
+module-level functions directly still works but is deprecated in favor of
+``DEFAULT_INJECTORS.get(name)`` (see docs/TESTING.md).
+
+Injectors are **pure**: they never modify the input graph — the mutation is
+graph surgery into a fresh :class:`Graph` (the contract
+``Session.verify(mutate_pure=True)`` relies on to reuse cached pairs).
 """
 from __future__ import annotations
 
@@ -23,6 +36,78 @@ class Injection:
     category: str  # expected diagnostic category (paper bug classes 1-5)
     graph: Graph
     site: str  # source location of the mutated node
+
+
+class InjectorError(ValueError):
+    """Unknown injector name (CLI maps this to exit code 2)."""
+
+
+@dataclass(frozen=True)
+class InjectorSpec:
+    """One registered injector: a pure graph mutation plus its metadata."""
+
+    name: str
+    category: str  # expected diagnostic category of the injected bug
+    site_op: str  # op the mutation rewrites (fast applicability filter)
+    fn: Callable  # fn(graph, index=0) -> Optional[Injection]
+    doc: str = ""
+
+    def applicable(self, g: Graph) -> bool:
+        """Cheap necessary condition; ``fn`` may still return None when its
+        site predicate (e.g. both dims > 1) rejects every candidate."""
+        return any(n.op == self.site_op for n in g)
+
+    def __call__(self, g: Graph, index: int = 0) -> Optional[Injection]:
+        return self.fn(g, index=index)
+
+
+class InjectorRegistry:
+    """Named injectors with category/site metadata (mirrors the rule and
+    scenario registries: one decorated registration per injector)."""
+
+    def __init__(self) -> None:
+        self._by_name: dict[str, InjectorSpec] = {}
+
+    # -- registration (decorator) ------------------------------------------
+    def injector(self, name: str, *, category: str, site_op: str,
+                 doc: str = ""):
+        def deco(fn: Callable) -> Callable:
+            if name in self._by_name:
+                raise ValueError(f"injector {name!r} registered twice")
+            self._by_name[name] = InjectorSpec(name, category, site_op, fn, doc)
+            return fn
+
+        return deco
+
+    # -- lookup ------------------------------------------------------------
+    def get(self, name: str) -> InjectorSpec:
+        spec = self._by_name.get(name)
+        if spec is None:
+            raise InjectorError(
+                f"unknown injector {name!r} "
+                f"(registered: {', '.join(self.names())})")
+        return spec
+
+    def names(self) -> list[str]:
+        return sorted(self._by_name)
+
+    def specs(self) -> list[InjectorSpec]:
+        return [self._by_name[n] for n in self.names()]
+
+    def applicable_to(self, g: Graph) -> list[InjectorSpec]:
+        return [s for s in self.specs() if s.applicable(g)]
+
+    def describe(self) -> str:
+        lines = []
+        for s in self.specs():
+            lines.append(f"{s.name:22s} category={s.category:20s} "
+                         f"site={s.site_op:14s} {s.doc}")
+        return "\n".join(lines)
+
+
+# The default registry, populated by the @DEFAULT_INJECTORS.injector
+# decorations below.
+DEFAULT_INJECTORS = InjectorRegistry()
 
 
 def _remap_params(params: tuple, **updates) -> dict:
@@ -63,6 +148,9 @@ def _find(g: Graph, op: str, pred=None, index: int = 0) -> Optional[Node]:
 # category 1: incorrect distributed operation
 
 
+@DEFAULT_INJECTORS.injector(
+    "drop_all_reduce", category="missing_all_reduce", site_op="all_reduce",
+    doc="bypass an all_reduce entirely (partial sum leaks downstream)")
 def drop_all_reduce(g: Graph, index: int = 0) -> Optional[Injection]:
     tgt = _find(g, "all_reduce", index=index)
     if tgt is None:
@@ -74,7 +162,7 @@ def drop_all_reduce(g: Graph, index: int = 0) -> Optional[Injection]:
         return None
 
     return Injection(
-        f"missing_all_reduce@{index}",
+        f"drop_all_reduce@{index}",
         f"removed all_reduce at {tgt.src}",
         "missing_all_reduce",
         _surgery(g, edit),
@@ -82,6 +170,10 @@ def drop_all_reduce(g: Graph, index: int = 0) -> Optional[Injection]:
     )
 
 
+@DEFAULT_INJECTORS.injector(
+    "duplicate_all_reduce", category="redundant_all_reduce",
+    site_op="all_reduce",
+    doc="apply an all_reduce twice (replicated tensor scaled by axis size)")
 def duplicate_all_reduce(g: Graph, index: int = 0) -> Optional[Injection]:
     tgt = _find(g, "all_reduce", index=index)
     if tgt is None:
@@ -96,7 +188,7 @@ def duplicate_all_reduce(g: Graph, index: int = 0) -> Optional[Injection]:
         return None
 
     return Injection(
-        f"redundant_all_reduce@{index}",
+        f"duplicate_all_reduce@{index}",
         f"duplicated all_reduce at {tgt.src}",
         "redundant_all_reduce",
         _surgery(g, edit),
@@ -104,6 +196,10 @@ def duplicate_all_reduce(g: Graph, index: int = 0) -> Optional[Injection]:
     )
 
 
+@DEFAULT_INJECTORS.injector(
+    "wrong_collective_op", category="unverified_frontier",
+    site_op="all_reduce",
+    doc="all_reduce(add) silently becomes all_reduce(max)")
 def wrong_collective_op(g: Graph, index: int = 0) -> Optional[Injection]:
     tgt = _find(g, "all_reduce", lambda n: n.param("reduce_op") == "add", index)
     if tgt is None:
@@ -129,6 +225,10 @@ def wrong_collective_op(g: Graph, index: int = 0) -> Optional[Injection]:
 # category 2: incorrect distributed configuration
 
 
+@DEFAULT_INJECTORS.injector(
+    "wrong_replica_groups", category="wrong_replica_groups",
+    site_op="all_reduce",
+    doc="all_reduce over half-mesh replica groups instead of the full axis")
 def wrong_replica_groups(g: Graph, index: int = 0) -> Optional[Injection]:
     tgt = _find(g, "all_reduce", index=index)
     if tgt is None:
@@ -154,6 +254,9 @@ def wrong_replica_groups(g: Graph, index: int = 0) -> Optional[Injection]:
 # category 3: inconsistent tensor precision
 
 
+@DEFAULT_INJECTORS.injector(
+    "precision_drop", category="precision_mismatch", site_op="dot",
+    doc="matmul computed in a lower dtype with a silent upcast")
 def precision_drop(g: Graph, index: int = 0) -> Optional[Injection]:
     tgt = _find(g, "dot", lambda n: n.dtype in ("float32", "bfloat16"), index)
     if tgt is None:
@@ -181,6 +284,9 @@ def precision_drop(g: Graph, index: int = 0) -> Optional[Injection]:
 # category 4: incorrect axis splitting (the BSH reshape bug, Fig. 1)
 
 
+@DEFAULT_INJECTORS.injector(
+    "swap_reshape_dims", category="layout_mismatch", site_op="reshape",
+    doc="reshape swaps leading dims then transposes back (Fig. 1 BSH bug)")
 def swap_reshape_dims(g: Graph, index: int = 0) -> Optional[Injection]:
     def pred(n: Node) -> bool:
         s = n.shape
@@ -214,6 +320,9 @@ def swap_reshape_dims(g: Graph, index: int = 0) -> Optional[Injection]:
 # category 5: incorrect layout optimization
 
 
+@DEFAULT_INJECTORS.injector(
+    "wrong_transpose", category="layout_mismatch", site_op="transpose",
+    doc="transpose uses a wrong permutation, reshaped back to shape")
 def wrong_transpose(g: Graph, index: int = 0) -> Optional[Injection]:
     # swapping the first two output dims must MOVE data (both dims > 1),
     # otherwise the mutation is a unit-dim no-op the verifier rightly accepts
@@ -248,6 +357,9 @@ def wrong_transpose(g: Graph, index: int = 0) -> Optional[Injection]:
     )
 
 
+@DEFAULT_INJECTORS.injector(
+    "wrong_all_gather_dim", category="layout_mismatch", site_op="all_gather",
+    doc="all_gather concatenates along the wrong dimension")
 def wrong_all_gather_dim(g: Graph, index: int = 0) -> Optional[Injection]:
     tgt = _find(g, "all_gather", lambda n: len(n.shape) >= 2, index)
     if tgt is None:
@@ -277,6 +389,9 @@ def wrong_all_gather_dim(g: Graph, index: int = 0) -> Optional[Injection]:
     )
 
 
+@DEFAULT_INJECTORS.injector(
+    "wrong_scatter_dim", category="layout_mismatch", site_op="reduce_scatter",
+    doc="reduce_scatter splits along the wrong dimension (SP-style bug)")
 def wrong_scatter_dim(g: Graph, index: int = 0) -> Optional[Injection]:
     """reduce_scatter along the wrong dimension (sequence-parallel bug:
     scattering hidden instead of sequence), reshaped back so downstream
@@ -317,6 +432,9 @@ def wrong_scatter_dim(g: Graph, index: int = 0) -> Optional[Injection]:
     )
 
 
+@DEFAULT_INJECTORS.injector(
+    "shifted_slice", category="unverified_frontier", site_op="slice",
+    doc="slice start off by one (KV-cache style misslice)")
 def shifted_slice(g: Graph, index: int = 0) -> Optional[Injection]:
     def pred(n: Node) -> bool:
         st = n.param("start_indices")
@@ -348,24 +466,15 @@ def shifted_slice(g: Graph, index: int = 0) -> Optional[Injection]:
     )
 
 
-ALL_INJECTORS = [
-    drop_all_reduce,
-    duplicate_all_reduce,
-    wrong_collective_op,
-    wrong_replica_groups,
-    precision_drop,
-    swap_reshape_dims,
-    wrong_transpose,
-    wrong_all_gather_dim,
-    wrong_scatter_dim,
-    shifted_slice,
-]
+# Deprecated alias: the plain function list predating DEFAULT_INJECTORS.
+# Kept for back-compat (benchmarks, external callers); registry order.
+ALL_INJECTORS = [s.fn for s in DEFAULT_INJECTORS.specs()]
 
 
 def inject_all(g: Graph) -> list[Injection]:
     out = []
-    for inj in ALL_INJECTORS:
-        r = inj(g)
+    for spec in DEFAULT_INJECTORS.specs():
+        r = spec(g)
         if r is not None:
             out.append(r)
     return out

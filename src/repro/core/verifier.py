@@ -21,9 +21,9 @@ from jax.sharding import AbstractMesh, PartitionSpec
 
 from repro.compat import abstract_mesh
 
-from .ir import Graph, LEAF_OPS
+from .ir import ELEMENTWISE, Graph, LEAF_OPS
 from .partition import PartitionedVerifier, TemplateCache
-from .relations import DUP, SHARD, Diagnostic, RelStore
+from .relations import DUP, PARTIAL, SHARD, Diagnostic, RelStore
 from .report import BugSite, CacheStats, PhaseTimings, Report, rank_bug_sites
 from .rules import Propagator, WorklistEngine
 from .trace import trace, trace_sharded
@@ -105,9 +105,54 @@ def _frontier_ready(store: RelStore, dist: Graph, n) -> bool:
     )
 
 
+# unary fact-carrying ops a twisted layout flows through unchanged: walking
+# this chain upstream from a frontier finds the op that introduced the twist
+_LAYOUT_CHAIN_OPS = frozenset(
+    {"reshape", "transpose", "convert", "broadcast",
+     "all_gather", "reduce_scatter", "all_to_all"}
+)
+
+
+def _blame_twisted_layout(store: RelStore, dist: Graph, n):
+    """The producer op that twisted the layout reaching frontier node ``n``.
+
+    A layout bug (wrong transpose permutation, wrong all_gather dim) does
+    not fail *at* the mutated op — layout composition soundly carries a
+    permuted fact through it — it fails at the first consumer that needs
+    the aligned form.  When a frontier input holds facts but none of them
+    clean, walk its producer chain upstream through layout-carrying ops:
+    the op whose own input still has a clean fact is where the twist was
+    introduced (paper §5.3's exact-line localization for category-4/5
+    bugs)."""
+    def clean(nid: int) -> bool:
+        return any(f.clean for f in store.facts(nid))
+
+    # DFS upstream through twisted fact-carrying nodes; elementwise ops are
+    # layout-transparent (they propagate the twist), so the walk crosses
+    # them but only a layout-moving op can be the culprit
+    stack, seen, budget = list(n.inputs), set(), 256
+    while stack and budget > 0:
+        budget -= 1
+        i = stack.pop()
+        if i in seen:
+            continue
+        seen.add(i)
+        facts = store.facts(i)
+        if not facts or clean(i):
+            continue
+        cur = dist[i]
+        if cur.op in _LAYOUT_CHAIN_OPS and cur.inputs and clean(cur.inputs[0]):
+            return cur
+        if cur.op in _LAYOUT_CHAIN_OPS or cur.op in ELEMENTWISE:
+            stack.extend(cur.inputs)
+    return None
+
+
 def localize(base: Graph, dist: Graph, store: RelStore) -> list[BugSite]:
     """Paper §5.3: report unverified nodes whose inputs are all verified,
-    joined with the diagnostics collected during rule matching."""
+    joined with the diagnostics collected during rule matching; frontier
+    nodes fed by a twisted-layout chain additionally blame the op that
+    introduced the twist."""
     diag_by_node: dict[int, list[Diagnostic]] = {}
     for d in store.diagnostics:
         diag_by_node.setdefault(d.dist, []).append(d)
@@ -142,6 +187,52 @@ def localize(base: Graph, dist: Graph, store: RelStore) -> list[BugSite]:
                         f"although all of its inputs are verified",
                     )
                 )
+        blamed = _blame_twisted_layout(store, dist, n)
+        if blamed is not None:
+            key = (blamed.src, "layout_mismatch")
+            if key not in seen_src:
+                seen_src.add(key)
+                sites.append(
+                    BugSite(
+                        blamed.src,
+                        blamed.op,
+                        blamed.id,
+                        "layout_mismatch",
+                        f"{blamed.short()} twists the data layout: its input "
+                        f"is cleanly related to the baseline but no "
+                        f"downstream consumer can use the permuted result",
+                    )
+                )
+    return rank_bug_sites(sites)
+
+
+def _output_sites(
+    base: Graph, dist: Graph, store: RelStore,
+    specs: Sequence[OutputSpec], outputs_ok: Sequence[bool],
+) -> list[BugSite]:
+    """Fallback localization when no frontier site exists: every interior
+    node is related, yet an output arrived with the wrong placement — e.g. a
+    dropped gradient psum leaves the output a clean *partial* (category-1
+    missing collective), or it arrives sharded/twisted where a replicated
+    tensor was promised."""
+    sites: list[BugSite] = []
+    for b, d, spec, ok in zip(base.outputs, dist.outputs, specs, outputs_ok):
+        if ok:
+            continue
+        n = dist[d]
+        partial = any(f.kind == PARTIAL and f.base == b for f in store.facts(d))
+        if spec.kind == DUP and partial:
+            sites.append(BugSite(
+                n.src, n.op, n.id, "missing_all_reduce",
+                f"output {n.short()} remains a partial {spec.reduce_op}-sum "
+                f"over the axis — a reduction collective is missing on its "
+                f"producer path"))
+        else:
+            got = sorted({f.kind for f in store.facts(d) if f.base == b})
+            sites.append(BugSite(
+                n.src, n.op, n.id, "unverified_frontier",
+                f"output {n.short()} expected {spec.kind} placement but "
+                f"derived {got or 'no relation'} to the baseline output"))
     return rank_bug_sites(sites)
 
 
@@ -212,6 +303,8 @@ def verify_graphs(
     ]
     verified = all(outputs_ok)
     sites = [] if verified else localize(base, dist, prop.store)
+    if not verified and not sites:
+        sites = _output_sites(base, dist, prop.store, specs, outputs_ok)
     unverified = sum(
         1 for n in dist if n.op not in LEAF_OPS and not prop.store.verified(n.id)
     )

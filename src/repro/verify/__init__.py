@@ -44,6 +44,9 @@ from repro.core.report import (
 )
 from repro.core.verifier import VerifyOptions
 
+from repro.core.inject import DEFAULT_INJECTORS, InjectorRegistry, InjectorSpec
+
+from .campaign import CampaignReport, run_campaign
 from .plan import Plan, PlanError, Scenario
 from .scenarios import DEFAULT_SCENARIOS, ScenarioRegistry, ScenarioSpec
 from .session import Session, verify
@@ -54,6 +57,8 @@ __all__ = [
     "VerifyOptions",
     "Plan", "PlanError", "Scenario",
     "DEFAULT_SCENARIOS", "ScenarioRegistry", "ScenarioSpec",
+    "DEFAULT_INJECTORS", "InjectorRegistry", "InjectorSpec",
+    "CampaignReport", "run_campaign",
     "Session", "verify",
     "shard_dim", "spec_input_facts", "spec_output_specs",
 ]

@@ -4,12 +4,19 @@
                            [--dp N] [--sp] [--ep N] [--composite]
                            [--layers N] [--json out.json|-]
     python -m repro.verify --list
+    python -m repro.verify --list-injectors
+    python -m repro.verify campaign --arch llama3_8b --tp 4 [--seeds N]
+
+The ``campaign`` verb runs the detection-benchmark matrix
+(:mod:`repro.verify.campaign`): every registered injector x every
+applicable scenario x every ``--arch``, plus ``--seeds`` fuzzer seeds;
+exit 1 on any missed detection or clean-cell false positive.
 
 Exit codes (stable contract for CI and launcher scripts):
 
-    0  plan verified
-    1  plan NOT verified (bug sites in the report)
-    2  usage error (unknown arch/scenario, invalid plan, bad flags)
+    0  plan verified / campaign clean
+    1  plan NOT verified (bug sites) / campaign missed a bug or false-flagged
+    2  usage error (unknown arch/scenario/injector, invalid plan, bad flags)
 """
 from __future__ import annotations
 
@@ -42,6 +49,8 @@ def build_parser() -> argparse.ArgumentParser:
                     help="architecture id (repro.configs)")
     ap.add_argument("--list", action="store_true",
                     help="list registered scenarios and known archs, then exit")
+    ap.add_argument("--list-injectors", action="store_true",
+                    help="list registered bug injectors, then exit")
     ap.add_argument("--tp", type=int, default=None, help="tensor-parallel degree")
     ap.add_argument("--dp", type=int, default=1, help="data-parallel degree")
     ap.add_argument("--ep", type=int, default=1,
@@ -117,20 +126,16 @@ def _print_list() -> None:
 
 
 def _injector_of(spec: str):
-    from repro.core import inject as inj_mod
+    from repro.core.inject import DEFAULT_INJECTORS
 
     name, _, idx = spec.partition(":")
-    known = {f.__name__: f for f in getattr(inj_mod, "ALL_INJECTORS", [])}
-    fn = known.get(name)
-    if fn is None:
-        raise PlanError(
-            f"unknown injector {name!r} (known: {', '.join(sorted(known))})")
+    inj_spec = DEFAULT_INJECTORS.get(name)  # InjectorError -> exit 2
     index = int(idx) if idx else 1
 
     def mutate(gd):
-        inj = fn(gd, index=index)
+        inj = inj_spec(gd, index=index)
         if inj is None and not idx:
-            inj = fn(gd)  # default index only: fall back to the first site
+            inj = inj_spec(gd)  # default index only: fall back to first site
         if inj is None:
             raise PlanError(
                 f"injector {name!r} found no site at index {index}")
@@ -139,10 +144,103 @@ def _injector_of(spec: str):
     return mutate
 
 
+def build_campaign_parser() -> argparse.ArgumentParser:
+    ap = _Parser(
+        prog="python -m repro.verify campaign",
+        description="Detection-benchmark campaign: injector registry x "
+                    "scenario matrix x fuzzer seeds (paper Tables 4/5 as a "
+                    "regression gate).")
+    ap.add_argument("--arch", action="append", default=None,
+                    help="architecture id (repeatable; repro.configs)")
+    ap.add_argument("--tp", type=int, default=4,
+                    help="tensor-parallel degree for tp/sp/ep scenarios")
+    ap.add_argument("--dp", type=int, default=2,
+                    help="data-parallel degree for dp scenarios")
+    ap.add_argument("--layers", type=int, default=2,
+                    help="layer-count override per scenario")
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--scenarios", default=None,
+                    help="comma-separated scenario subset (default: all "
+                         "applicable)")
+    ap.add_argument("--injectors", default=None,
+                    help="comma-separated injector subset (default: the "
+                         "whole registry)")
+    ap.add_argument("--seeds", type=int, default=0,
+                    help="number of fuzzer seeds to sweep (seed-base..+N)")
+    ap.add_argument("--seed-base", type=int, default=0)
+    ap.add_argument("--fuzz-only", action="store_true",
+                    help="skip the arch matrix, run only the fuzzer seeds")
+    ap.add_argument("--engine", choices=("worklist", "passes"),
+                    default="worklist")
+    ap.add_argument("--no-stamp", action="store_true")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the detection-matrix report ('-' = stdout)")
+    ap.add_argument("--quiet", action="store_true")
+    return ap
+
+
+def campaign_main(argv: Optional[list] = None) -> int:
+    from repro.core.inject import InjectorError
+    from repro.core.verifier import VerifyOptions
+
+    from .campaign import run_campaign
+
+    args = build_campaign_parser().parse_args(argv)
+    archs = args.arch or []
+    if not archs and not args.fuzz_only:
+        print("error: campaign needs at least one --arch (or --fuzz-only)",
+              file=sys.stderr)
+        return EXIT_USAGE
+    known = set(ARCH_IDS) | set(EXTRA_IDS)
+    for a in archs:
+        if a not in known:
+            print(f"error: unknown arch {a!r} "
+                  f"(known: {', '.join(sorted(known))})", file=sys.stderr)
+            return EXIT_USAGE
+    scenarios = args.scenarios.split(",") if args.scenarios else None
+    injectors = args.injectors.split(",") if args.injectors else None
+    seeds = tuple(range(args.seed_base, args.seed_base + args.seeds))
+    options = VerifyOptions(engine=args.engine, stamp=not args.no_stamp)
+    try:
+        report = run_campaign(
+            [] if args.fuzz_only else archs,
+            tp=args.tp, dp=args.dp, layers=args.layers, seq=args.seq,
+            scenarios=scenarios, injectors=injectors, fuzz_seeds=seeds,
+            options=options)
+    except (PlanError, InjectorError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return EXIT_USAGE
+
+    summary_stream = sys.stdout
+    if args.json == "-":
+        print(report.to_json(indent=2))
+        summary_stream = sys.stderr
+    elif args.json:
+        with open(args.json, "w") as fh:
+            fh.write(report.to_json(indent=2) + "\n")
+    if not args.quiet:
+        print(report.summary(), file=summary_stream)
+    return EXIT_VERIFIED if report.ok else EXIT_UNVERIFIED
+
+
+def _print_injectors() -> None:
+    from repro.core.inject import DEFAULT_INJECTORS
+
+    print("registered injectors:")
+    for line in DEFAULT_INJECTORS.describe().splitlines():
+        print(f"  {line}")
+
+
 def main(argv: Optional[list] = None) -> int:
+    argv = sys.argv[1:] if argv is None else argv
+    if argv and argv[0] == "campaign":
+        return campaign_main(argv[1:])
     args = build_parser().parse_args(argv)
     if args.list:
         _print_list()
+        return EXIT_VERIFIED
+    if args.list_injectors:
+        _print_injectors()
         return EXIT_VERIFIED
     known = set(ARCH_IDS) | set(EXTRA_IDS)
     if args.arch is None:
@@ -153,10 +251,12 @@ def main(argv: Optional[list] = None) -> int:
         print(f"error: unknown arch {args.arch!r} "
               f"(known: {', '.join(sorted(known))})", file=sys.stderr)
         return EXIT_USAGE
+    from repro.core.inject import InjectorError
+
     try:
         plan = _plan_of(args)
         mutate = _injector_of(args.inject) if args.inject else None
-    except PlanError as e:
+    except (PlanError, InjectorError) as e:
         print(f"error: {e}", file=sys.stderr)
         return EXIT_USAGE
 

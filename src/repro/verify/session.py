@@ -106,14 +106,21 @@ class Session:
     # ------------------------------------------------------------ verify
     def verify(self, arch: str, plan: Optional[Plan] = None, *,
                options: Optional[VerifyOptions] = None,
-               mutate_dist=None, **plan_kw) -> Report:
+               mutate_dist=None, mutate_pure: bool = False,
+               **plan_kw) -> Report:
         """Verify ``arch`` under ``plan`` (or ``Plan(**plan_kw)``).
 
         ``mutate_dist`` (testing/bug-injection hook) receives each
         scenario's distributed graph and returns the mutated graph; mutated
         runs bypass the graph-pair and template caches (mutation acts on a
         fresh copy, so the shared *base-trace* cache stays in use — it
-        holds only unmutated traces)."""
+        holds only unmutated traces).  ``mutate_pure=True`` declares the
+        mutation never modifies its input graph (true of every
+        ``repro.core.inject`` injector — surgery builds a fresh Graph):
+        the *unmutated* pair is then served from / stored into the
+        graph-pair cache, so an injection campaign pays one trace per
+        scenario instead of one per cell.  Template caches stay bypassed
+        either way (they describe the unmutated pair)."""
         if plan is not None and plan_kw:
             raise TypeError(
                 f"pass either a Plan or plan keywords, not both "
@@ -126,28 +133,35 @@ class Session:
         for scen in plan.scenarios():
             results.append(
                 (scen, self._run_scenario(arch, cfg_h, plan, scen, options,
-                                          mutate_dist)))
+                                          mutate_dist, mutate_pure)))
         report = _merge(arch, plan, results)
         report.elapsed_s = time.perf_counter() - t0
         return report
 
     def _run_scenario(self, arch: str, cfg_h: str, plan: Plan, scen: Scenario,
-                      options: VerifyOptions, mutate_dist) -> Report:
+                      options: VerifyOptions, mutate_dist,
+                      mutate_pure: bool = False) -> Report:
         key = (arch, cfg_h, scen.name, scen.size, plan.layers, plan.batch,
                plan.seq, plan.max_len, plan.stages, plan.tp, options.stamp)
-        cached = key in self._graphs and mutate_dist is None
+        cacheable = mutate_dist is None or mutate_pure
+        cached = key in self._graphs and cacheable
         if cached:
             pair = self._graphs[key]
         else:
             pair = build_pair(arch, plan, scen, stamp=options.stamp,
                               base_cache=self._base_traces,
                               base_key=(arch, cfg_h))
-            if mutate_dist is None:
+            if cacheable:
                 self._graphs[key] = pair
         dist = pair.dist
         if mutate_dist is not None:
             dist = mutate_dist(dist)
-            dist.stamp = None  # surgery invalidates periodicity metadata
+            # a pure identity mutation (hook returned the input unchanged)
+            # keeps the stamp; anything else — a new graph, or a possibly
+            # in-place edit under the default impure contract — invalidates
+            # the periodicity metadata
+            if not (mutate_pure and dist is pair.dist):
+                dist.stamp = None
             cache = None  # templates belong to the unmutated pair
         else:
             cache = self._templates.setdefault(key, TemplateCache())

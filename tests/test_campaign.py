@@ -1,0 +1,198 @@
+"""The detection-benchmark campaign subsystem: matrix expansion over the
+injector registry x scenario table, 100%-detection / 0-false-positive
+accounting, fuzz-seed determinism, report JSON round trip, warm-Session
+pair reuse under pure mutations, and the CLI verb's exit-code contract."""
+import json
+
+import pytest
+
+from repro.core.inject import DEFAULT_INJECTORS, InjectorError
+from repro.core.synth import fuzz_inject, fuzz_tp_mlp
+from repro.verify import Plan, PlanError, Session
+from repro.verify.campaign import (
+    CAMPAIGN_SCENARIOS,
+    SCENARIO_KINDS,
+    CampaignReport,
+    campaign_scenarios,
+    run_campaign,
+)
+from repro.verify.cli import main as cli_main
+
+ARCH = "qwen3_4b"
+SMOKE_KW = dict(tp=4, dp=2, layers=2, scenarios=["tp-forward", "dp-forward"])
+
+
+@pytest.fixture(scope="module")
+def smoke_report():
+    return run_campaign([ARCH], fuzz_seeds=range(5), **SMOKE_KW)
+
+
+# ------------------------------------------------------------------ matrix
+def test_campaign_matrix_covers_registry(smoke_report):
+    rep = smoke_report
+    assert rep.injectors == DEFAULT_INJECTORS.names()
+    assert rep.scenarios == ["tp-forward", "dp-forward"]
+    # one clean cell per (arch, scenario) + one cell per injector
+    clean = [c for c in rep.cells if c.injector == ""]
+    assert len(clean) == 2 and all(c.outcome == "clean_pass" for c in clean)
+    injected = [c for c in rep.cells if c.injector]
+    assert len(injected) == 2 * len(rep.injectors)
+
+
+def test_campaign_gate_is_clean(smoke_report):
+    """The paper's claim as a gate: every applicable injection detected,
+    no clean cell flagged."""
+    rep = smoke_report
+    assert rep.ok, rep.summary()
+    assert rep.missed == 0 and rep.false_positives == 0
+    assert rep.detection_rate == 1.0
+    assert rep.localization_rate >= 0.9
+    # skips are only ever for injectors with no applicable site
+    for c in rep.cells:
+        if c.outcome == "skipped":
+            assert c.injector and "no applicable site" in c.detail
+
+
+def test_campaign_fuzz_cells(smoke_report):
+    rep = smoke_report
+    assert len(rep.fuzz) == 5
+    assert all(f.clean_outcome == "clean_pass" for f in rep.fuzz)
+    assert all(f.injected_outcome in ("detected", "skipped")
+               for f in rep.fuzz)
+
+
+def test_campaign_warm_session_reuse(smoke_report):
+    """Injected cells must reuse the clean cell's traced pair
+    (mutate_pure): only the first cell of each scenario traces."""
+    by_scen: dict = {}
+    for c in smoke_report.cells:
+        by_scen.setdefault(c.scenario, []).append(c)
+    for cells in by_scen.values():
+        ran = [c for c in cells if c.outcome != "skipped"]
+        assert not ran[0].trace_cached  # the clean cell traces...
+        assert all(c.trace_cached for c in ran[1:]), (
+            "injected cells re-traced despite the pure-mutation contract")
+
+
+# ------------------------------------------------------------ determinism
+def test_fuzz_determinism_same_seed_same_report():
+    a = run_campaign([], fuzz_seeds=(0, 1, 2, 3, 4))
+    b = run_campaign([], fuzz_seeds=(0, 1, 2, 3, 4))
+    assert a.canonical() == b.canonical()
+    assert json.loads(a.to_json())["fuzz"] == json.loads(b.to_json())["fuzz"]
+
+
+def test_fuzz_sweep_respects_injector_subset():
+    """--injectors bounds the fuzz draw too: the report's injectors field
+    covers every cell, and an excluded injector can never fail the gate."""
+    rep = run_campaign([], injectors=["drop_all_reduce"], fuzz_seeds=range(6))
+    assert rep.injectors == ["drop_all_reduce"]
+    assert {f.injector for f in rep.fuzz if f.injector} <= {"drop_all_reduce"}
+
+
+def test_fuzz_pair_deterministic_graphs():
+    p1, s1 = fuzz_tp_mlp(7)
+    p2, s2 = fuzz_tp_mlp(7)
+    assert s1 == s2
+    assert [n.op for n in p1.dist] == [n.op for n in p2.dist]
+    i1, i2 = fuzz_inject(p1, 7), fuzz_inject(p2, 7)
+    assert (i1 is None) == (i2 is None)
+    if i1 is not None:
+        assert i1.name == i2.name and i1.site == i2.site
+
+
+# ------------------------------------------------------------------ report
+def test_campaign_report_json_round_trip(smoke_report):
+    rep = smoke_report
+    back = CampaignReport.from_json(rep.to_json())
+    assert back.canonical() == rep.canonical()
+    assert back.ok == rep.ok
+    # per-cell stats survive the trip
+    assert [c.num_facts for c in back.cells] == [c.num_facts for c in rep.cells]
+
+
+def test_campaign_report_rejects_unknown_schema(smoke_report):
+    d = json.loads(smoke_report.to_json())
+    d["schema"] = 99
+    with pytest.raises(ValueError, match="schema"):
+        CampaignReport.from_json(json.dumps(d))
+
+
+def test_campaign_summary_matrix(smoke_report):
+    text = smoke_report.summary()
+    assert "CAMPAIGN OK" in text
+    assert "tp-forward" in text and "dp-forward" in text
+    assert "drop_all_reduce" in text
+
+
+# -------------------------------------------------------------- validation
+def test_campaign_scenario_table_matches_registry():
+    from repro.verify import DEFAULT_SCENARIOS
+
+    assert set(SCENARIO_KINDS) <= set(DEFAULT_SCENARIOS.kinds())
+    assert len(CAMPAIGN_SCENARIOS) >= 5
+
+
+def test_campaign_unknown_names_raise():
+    with pytest.raises(PlanError, match="unknown campaign scenario"):
+        campaign_scenarios(["zz-forward"])
+    with pytest.raises(InjectorError, match="unknown injector"):
+        run_campaign([ARCH], injectors=["zz_injector"], **SMOKE_KW)
+
+
+def test_session_mutate_pure_keeps_cache_clean():
+    """A pure mutation must not poison the cached pair: a clean re-verify
+    after an injected run still passes and serves from the cache."""
+    from repro.core.inject import drop_all_reduce
+
+    with Session() as s:
+        plan = Plan(tp=4, layers=2, batch=2)
+        assert s.verify(ARCH, plan).verified
+        bad = s.verify(ARCH, plan, mutate_pure=True,
+                       mutate_dist=lambda gd: drop_all_reduce(gd, 1).graph)
+        assert not bad.verified and bad.cache.trace_cached
+        clean = s.verify(ARCH, plan)
+        assert clean.verified and clean.cache.trace_cached
+
+
+# --------------------------------------------------------------------- CLI
+def test_cli_campaign_smoke(tmp_path, capsys):
+    out = tmp_path / "campaign.json"
+    rc = cli_main(["campaign", "--arch", ARCH, "--tp", "4", "--layers", "2",
+                   "--scenarios", "tp-forward",
+                   "--injectors", "drop_all_reduce,wrong_transpose",
+                   "--seeds", "2", "--json", str(out)])
+    assert rc == 0
+    d = json.loads(out.read_text())
+    assert d["schema"] == 1 and d["aggregates"]["ok"] is True
+    assert len(d["fuzz"]) == 2
+    assert "CAMPAIGN OK" in capsys.readouterr().out
+
+
+def test_cli_campaign_usage_errors(capsys):
+    assert cli_main(["campaign"]) == 2  # no arch, no --fuzz-only
+    assert cli_main(["campaign", "--arch", "nope"]) == 2
+    rc = cli_main(["campaign", "--arch", ARCH, "--injectors", "zz"])
+    assert rc == 2
+    assert "unknown injector" in capsys.readouterr().err
+    rc = cli_main(["campaign", "--arch", ARCH, "--scenarios", "zz"])
+    assert rc == 2
+    assert "unknown campaign scenario" in capsys.readouterr().err
+
+
+def test_cli_campaign_fuzz_only():
+    assert cli_main(["campaign", "--fuzz-only", "--seeds", "3",
+                     "--quiet"]) == 0
+
+
+def test_cli_list_injectors(capsys):
+    assert cli_main(["--list-injectors"]) == 0
+    out = capsys.readouterr().out
+    for name in DEFAULT_INJECTORS.names():
+        assert name in out
+
+
+def test_cli_inject_unknown_exits_two(capsys):
+    assert cli_main([ARCH, "--tp", "4", "--layers", "2",
+                     "--inject", "zz_injector", "--quiet"]) == 2
+    assert "unknown injector" in capsys.readouterr().err

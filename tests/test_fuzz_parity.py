@@ -1,0 +1,89 @@
+"""Seeded engine-parity fuzzing: every fuzzed synth graph pair must produce
+identical verdicts and identical fact sets under the semi-naive worklist
+engine and the pass-based reference engine — clean AND with a seeded
+registry injection applied.  The seed list is fixed so CI is
+deterministic."""
+import pytest
+
+from repro.core.rules import Propagator, WorklistEngine
+from repro.core.synth import (
+    fuzz_inject,
+    fuzz_tp_mlp,
+    input_facts_of,
+    register_inputs,
+)
+from repro.core.verifier import VerifyOptions, verify_graphs
+
+SEEDS = list(range(12))
+
+
+def _fact_keys(prop):
+    return {f.key() for facts in prop.store.by_dist.values() for f in facts}
+
+
+def _run_both(base, dist, pair, size):
+    props = {}
+    for name in ("passes", "worklist"):
+        p = Propagator(base, dist, size)
+        eng = WorklistEngine(p) if name == "worklist" else None
+        for kind, bi, di, dim in pair.input_relations:
+            b, d = pair.base_inputs[bi], pair.dist_inputs[di]
+            if kind == "dup":
+                p.register_dup(b, d)
+            else:
+                p.register_shard(b, d, dim)
+        if eng is not None:
+            eng.run()
+        else:
+            p.run()
+        props[name] = p
+    return props["passes"], props["worklist"]
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_fuzz_clean_engine_parity(seed):
+    pair, spec = fuzz_tp_mlp(seed, tag_layers=False)
+    pp, pw = _run_both(pair.base, pair.dist, pair, spec.size)
+    assert _fact_keys(pp) == _fact_keys(pw)
+    out_b, out_d = pair.base.outputs[0], pair.dist.outputs[0]
+    for p in (pp, pw):
+        assert any(f.base == out_b and f.kind == "dup" and f.clean
+                   for f in p.store.facts(out_d)), f"seed {seed} unverified"
+
+
+@pytest.mark.parametrize("seed", SEEDS)
+def test_fuzz_injected_engine_parity(seed):
+    """Injected graphs must be rejected identically: same verdict, same
+    fact set — a divergence means one engine under- or over-derives."""
+    pair, spec = fuzz_tp_mlp(seed, tag_layers=False)
+    inj = fuzz_inject(pair, seed)
+    if inj is None:
+        pytest.skip(f"seed {seed}: no applicable injector")
+    pp, pw = _run_both(pair.base, inj.graph, pair, spec.size)
+    assert _fact_keys(pp) == _fact_keys(pw)
+    out_b, out_d = pair.base.outputs[0], inj.graph.outputs[0]
+    for p in (pp, pw):
+        assert not any(f.base == out_b and f.kind == "dup" and f.clean
+                       for f in p.store.facts(out_d)), (
+            f"seed {seed}: {inj.name} not detected")
+
+
+@pytest.mark.parametrize("seed", SEEDS[:6])
+def test_fuzz_verify_graphs_report_parity(seed):
+    """Through the full verify_graphs path (partitioning + localization):
+    verdict and bug-site categories agree across engines."""
+    pair, spec = fuzz_tp_mlp(seed)
+    inj = fuzz_inject(pair, seed)
+    dist = inj.graph if inj is not None else pair.dist
+    reports = {}
+    for eng in ("passes", "worklist"):
+        reports[eng] = verify_graphs(
+            pair.base, dist, size=spec.size,
+            input_facts=input_facts_of(pair),
+            base_inputs=pair.base_inputs, dist_inputs=pair.dist_inputs,
+            options=VerifyOptions(engine=eng))
+    rp, rw = reports["passes"], reports["worklist"]
+    assert rw.verified == rp.verified
+    assert rw.verified == (inj is None)
+    assert ({b.category for b in rw.bug_sites}
+            == {b.category for b in rp.bug_sites})

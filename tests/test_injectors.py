@@ -1,0 +1,120 @@
+"""The injector registry and localization precision: every registered
+injector's bug, injected into the real llama3_8b TP-4 graphs, must be
+detected AND blamed at the injected source site (top-ranked BugSite site or
+category match — removed-node bugs have no node left to blame, so the
+expected category at the consumer is the localization signal there)."""
+import pytest
+
+from repro.core.inject import (
+    ALL_INJECTORS,
+    DEFAULT_INJECTORS,
+    InjectorError,
+    inject_all,
+)
+from repro.core.synth import deep_tp_mlp
+from repro.verify import Plan, Session
+
+ARCH = "llama3_8b"
+TP = 4
+
+
+# ---------------------------------------------------------------- registry
+def test_registry_has_all_module_functions():
+    assert len(DEFAULT_INJECTORS.names()) >= 8
+    assert set(DEFAULT_INJECTORS.names()) == {
+        f.__name__ for f in ALL_INJECTORS}
+
+
+def test_registry_unknown_name_lists_available():
+    with pytest.raises(InjectorError) as e:
+        DEFAULT_INJECTORS.get("zz_injector")
+    for name in DEFAULT_INJECTORS.names():
+        assert name in str(e.value)
+
+
+def test_registry_double_registration_rejected():
+    with pytest.raises(ValueError, match="twice"):
+        DEFAULT_INJECTORS.injector(
+            "drop_all_reduce", category="x", site_op="add")(lambda g: None)
+
+
+def test_registry_metadata_and_describe():
+    spec = DEFAULT_INJECTORS.get("drop_all_reduce")
+    assert spec.category == "missing_all_reduce"
+    assert spec.site_op == "all_reduce"
+    text = DEFAULT_INJECTORS.describe()
+    assert "drop_all_reduce" in text and "layout_mismatch" in text
+
+
+def test_applicability_filter():
+    pair = deep_tp_mlp(2, size=4)
+    names = {s.name for s in DEFAULT_INJECTORS.applicable_to(pair.dist)}
+    assert "drop_all_reduce" in names  # the pair has all_reduce ops
+    assert "wrong_scatter_dim" not in names  # ... but no reduce_scatter
+
+
+def test_injectors_are_pure():
+    """The mutate_pure contract: injection must not touch the input graph."""
+    pair = deep_tp_mlp(2, size=4)
+    before = [(n.op, n.inputs, n.params) for n in pair.dist]
+    for spec in DEFAULT_INJECTORS.applicable_to(pair.dist):
+        inj = spec(pair.dist)
+        assert inj is None or inj.graph is not pair.dist
+    assert [(n.op, n.inputs, n.params) for n in pair.dist] == before
+
+
+def test_inject_all_uses_registry_order():
+    pair = deep_tp_mlp(2, size=4)
+    names = [i.name.split("@")[0] for i in inject_all(pair.dist)]
+    order = [n for n in DEFAULT_INJECTORS.names() if n in names]
+    assert names == order
+
+
+# -------------------------------------------------- localization precision
+@pytest.fixture(scope="module")
+def session():
+    with Session() as s:
+        yield s
+
+
+@pytest.mark.parametrize("name", DEFAULT_INJECTORS.names())
+def test_localization_precision(session, name):
+    """Paper §5.3 on llama3_8b TP-4: detection alone is not enough — the
+    top-ranked site must point at the injection."""
+    spec = DEFAULT_INJECTORS.get(name)
+    holder = {}
+
+    def mutate(gd):
+        inj = spec(gd, index=1) or spec(gd)
+        holder["inj"] = inj
+        return inj.graph if inj else gd
+
+    # gather/scatter injectors only have sites in the SP formulation
+    plans = [Plan(tp=TP, layers=2, batch=2),
+             Plan(tp=TP, sp=True, layers=2, batch=2)]
+    for plan in plans:
+        holder.clear()
+        rep = session.verify(ARCH, plan, mutate_dist=mutate, mutate_pure=True)
+        inj = holder.get("inj")
+        if inj is not None:
+            break
+    assert inj is not None, f"{name}: no site in either formulation"
+    assert not rep.verified, f"{name}: injection missed"
+    assert rep.bug_sites, f"{name}: detected but no bug sites"
+    top = rep.bug_sites[0]
+    assert top.src == inj.site or top.category == inj.category, (
+        f"{name}: injected {inj.site}/{inj.category}, top-ranked site is "
+        f"{top.src}/{top.category}")
+
+
+def test_campaign_records_per_cell_precision():
+    """The campaign report carries the per-cell localization bit the
+    precision sweep aggregates."""
+    from repro.verify.campaign import run_campaign
+
+    rep = run_campaign([ARCH], tp=TP, layers=2, scenarios=["tp-forward"],
+                       injectors=["wrong_transpose", "precision_drop"])
+    cells = [c for c in rep.cells if c.injector]
+    assert all(c.outcome == "detected" and c.localized for c in cells)
+    assert all(c.top_sites for c in cells)
+    assert rep.localization_rate == 1.0

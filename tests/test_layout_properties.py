@@ -1,0 +1,138 @@
+"""Property-based Layout algebra tests (hypothesis; skipped if absent).
+
+Complements tests/test_bijection.py (apply/compose/inverse vs numpy) with
+the algebraic laws the campaign fuzzer leans on: split/merge round trips
+cancel, consecutive reshapes collapse (then_reshape associativity), the
+NotSplitMerge fallback is sound (never a wrong Layout — crossing reshapes
+raise instead), and synthesize_ops emits a sequence that replays to the
+same Layout."""
+import numpy as np
+import pytest
+
+from repro.core.bijection import Layout, NotSplitMerge, layout_of_ops
+
+pytest.importorskip("hypothesis")
+from hypothesis import given, settings, strategies as st
+
+_DIM = st.sampled_from([1, 2, 3, 4, 6, 8])
+
+
+@st.composite
+def shapes(draw, max_rank=4):
+    rank = draw(st.integers(1, max_rank))
+    return tuple(draw(_DIM) for _ in range(rank))
+
+
+def _factorizations(shape, rng):
+    """A random full split of every dim into prime-ish factors."""
+    out = []
+    for s in shape:
+        fs, rem = [], s
+        while rem > 1:
+            divs = [d for d in range(2, rem + 1) if rem % d == 0]
+            d = int(rng.choice(divs[: max(1, len(divs) // 2)]))
+            fs.append(d)
+            rem //= d
+        out.append(tuple(fs) or (1,))
+    return out
+
+
+@given(shapes(), st.integers(0, 2**31))
+@settings(max_examples=150, deadline=None)
+def test_split_merge_round_trip(shape, seed):
+    """Splitting every dim into factors and merging back is the identity."""
+    rng = np.random.default_rng(seed)
+    split = tuple(f for fs in _factorizations(shape, rng) for f in fs)
+    lay = Layout.identity(shape).then_reshape(split).then_reshape(shape)
+    assert lay.equivalent(Layout.identity(shape))
+    x = np.arange(int(np.prod(shape))).reshape(shape)
+    np.testing.assert_array_equal(lay.apply(x), x)
+
+
+@given(shapes(), st.integers(0, 2**31), st.integers(0, 2**31))
+@settings(max_examples=150, deadline=None)
+def test_then_reshape_associativity(shape, seed_a, seed_b):
+    """reshape(s1); reshape(s2) == reshape(s2): intermediate regroupings
+    never change the final bijection when both paths are split/merge."""
+    rng_a = np.random.default_rng(seed_a)
+    rng_b = np.random.default_rng(seed_b)
+    s1 = tuple(f for fs in _factorizations(shape, rng_a) for f in fs)
+    total = int(np.prod(shape))
+    # a second grouping of the same total, from a fresh factor walk
+    fs, rem = [], total
+    while rem > 1:
+        divs = [d for d in range(2, rem + 1) if rem % d == 0]
+        d = int(rng_b.choice(divs))
+        fs.append(d)
+        rem //= d
+    s2 = tuple(fs) or (1,)
+    base = Layout.identity(shape)
+    try:
+        chained = base.then_reshape(s1).then_reshape(s2)
+        direct = base.then_reshape(s2)
+    except NotSplitMerge:
+        return
+    assert chained.equivalent(direct)
+    x = np.arange(total).reshape(shape)
+    np.testing.assert_array_equal(chained.apply(x), direct.apply(x))
+
+
+# ------------------------------------------------- NotSplitMerge soundness
+def test_crossing_reshape_raises():
+    """(2,3) -> (3,2) re-chunks across the atom boundary: the verifier must
+    fall back (raise), not fabricate a bijection."""
+    with pytest.raises(NotSplitMerge):
+        Layout.identity((2, 3)).then_reshape((3, 2))
+    assert layout_of_ops((2, 3), [("reshape", (3, 2))]) is None
+    # after a transpose the boundary moves: (3,2) from transposed (2,3)
+    # is a pure regroup of the permuted atoms and must succeed
+    lay = layout_of_ops((2, 3), [("transpose", (1, 0)), ("reshape", (3, 2))])
+    assert lay is None or lay.dst_shape == (3, 2)
+
+
+@given(shapes(), st.integers(0, 2**31))
+@settings(max_examples=150, deadline=None)
+def test_fallback_soundness(shape, seed):
+    """Whenever then_reshape *succeeds* the result matches numpy exactly —
+    so a NotSplitMerge fallback can only lose completeness, never
+    soundness."""
+    rng = np.random.default_rng(seed)
+    total = int(np.prod(shape))
+    # arbitrary (often crossing) target grouping
+    fs, rem = [], total
+    while rem > 1:
+        divs = [d for d in range(2, rem + 1) if rem % d == 0]
+        d = int(rng.choice(divs))
+        fs.append(d)
+        rem //= d
+    target = tuple(rng.permutation(fs).tolist()) or (1,)
+    perm = tuple(rng.permutation(len(shape)).tolist())
+    try:
+        lay = (Layout.identity(shape).then_transpose(perm)
+               .then_reshape(target))
+    except NotSplitMerge:
+        return  # fallback path: no claim made, trivially sound
+    x = np.arange(total).reshape(shape)
+    np.testing.assert_array_equal(
+        lay.apply(x), x.transpose(perm).reshape(target))
+
+
+# -------------------------------------------------- synthesize_ops replay
+@given(shapes(), st.integers(0, 2**31))
+@settings(max_examples=150, deadline=None)
+def test_synthesize_ops_replays_to_same_layout(shape, seed):
+    rng = np.random.default_rng(seed)
+    split = tuple(f for fs in _factorizations(shape, rng) for f in fs)
+    perm = tuple(rng.permutation(len(split)).tolist())
+    try:
+        lay = (Layout.identity(shape).then_reshape(split)
+               .then_transpose(perm))
+    except NotSplitMerge:
+        return
+    replayed = layout_of_ops(lay.src_shape, lay.synthesize_ops())
+    assert replayed is not None, "synthesized ops left the fragment"
+    assert replayed.equivalent(lay)
+    assert replayed.src_shape == lay.src_shape
+    assert replayed.dst_shape == lay.dst_shape
+    x = np.arange(int(np.prod(shape))).reshape(shape)
+    np.testing.assert_array_equal(replayed.apply(x), lay.apply(x))
