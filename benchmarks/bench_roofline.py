@@ -1,12 +1,48 @@
 """Roofline table (EXPERIMENTS.md §Roofline): aggregates the dry-run JSON
 artifacts produced by ``python -m repro.launch.dryrun --all`` into the
-per-(arch x shape x mesh) three-term roofline rows."""
+per-(arch x shape x mesh) three-term roofline rows, plus a *verifier*
+roofline: per-phase rows for one representative verification run (under
+``VerifyOptions(profile=True)``) that pin where the wall-clock tail lives —
+trace vs stamp vs rewriting vs localization, with the top rules by
+cumulative time in ``derived``."""
 from __future__ import annotations
 
 import json
 from pathlib import Path
 
 ARTIFACTS = Path(__file__).resolve().parents[1] / "artifacts" / "dryrun"
+
+# representative pair for the verifier-phase roofline: small enough for a
+# PR-time smoke, big enough that the rules phase dominates trace noise
+_PROFILE_ARCH = "qwen3_4b"
+_PROFILE_TP = 4
+_PROFILE_LAYERS = 4
+
+
+def _verify_profile_rows() -> list[dict]:
+    from repro.core.verifier import VerifyOptions
+    from repro.verify import Plan, Session
+
+    with Session() as session:
+        rep = session.verify(
+            _PROFILE_ARCH, Plan(tp=_PROFILE_TP, layers=_PROFILE_LAYERS,
+                                seq=32),
+            options=VerifyOptions(profile=True))
+    t = rep.timings
+    prefix = f"roofline_verify_{_PROFILE_ARCH}"
+    rules = (t.profile or {}).get("rules", {})
+    top = " ".join(f"{name}={row['time_s']*1e3:.1f}ms"
+                   for name, row in list(rules.items())[:3])
+    return [
+        {"name": f"{prefix}_trace", "us_per_call": t.trace_s * 1e6,
+         "derived": f"tp={_PROFILE_TP} layers={_PROFILE_LAYERS}"},
+        {"name": f"{prefix}_stamp", "us_per_call": t.stamp_s * 1e6,
+         "derived": ""},
+        {"name": f"{prefix}_rules", "us_per_call": t.rules_s * 1e6,
+         "derived": f"top: {top}" if top else ""},
+        {"name": f"{prefix}_localize", "us_per_call": t.localize_s * 1e6,
+         "derived": f"facts={rep.num_facts}"},
+    ]
 
 
 def rows(mesh: str = "16x16", include_tagged: bool = False) -> list[dict]:
@@ -22,10 +58,11 @@ def rows(mesh: str = "16x16", include_tagged: bool = False) -> list[dict]:
 
 
 def run() -> list[dict]:
+    out = _verify_profile_rows()
     if not ARTIFACTS.exists():
-        return [{"name": "roofline_missing", "us_per_call": 0.0,
-                 "derived": "run `python -m repro.launch.dryrun --all` first"}]
-    out = []
+        out.append({"name": "roofline_missing", "us_per_call": 0.0,
+                    "derived": "run `python -m repro.launch.dryrun --all` first"})
+        return out
     for d in rows():
         name = f"roofline_{d['arch']}_{d['shape']}"
         if d["status"] == "skipped":

@@ -1,0 +1,143 @@
+"""PR-time perf gate: diff ``BENCH_results.json`` against the committed
+``BENCH_baseline.json`` and fail on a >25% regression of any *gated* row.
+
+Two gates, both schema-v2 aware (``{"schema": 2, "rows": {...}}``; legacy
+flat v1 files still load for transition):
+
+* **baseline diff** — each row in ``GATED_ROWS`` may regress at most
+  ``TOLERANCE``x over its committed baseline value.  Rows below
+  ``MIN_GATED_US`` in the baseline are skipped (timer noise dominates).
+  A gated row missing from the fresh results is a hard failure (a silently
+  dropped benchmark is itself a regression); a gated row missing from the
+  baseline is only a warning (the row is new — refresh the baseline).
+* **fig11c ratio** — memoized verification must scale sub-linearly in layer
+  count: ``fig11c_layers_32 / fig11c_layers_4 <= FIG11C_MAX_RATIO`` (8x the
+  layers in at most 4x the time).  This is self-relative, so it holds on
+  any runner speed.
+
+Refresh the baseline (only when a perf change is intentional) with::
+
+    PYTHONPATH=src python benchmarks/run.py
+    cp BENCH_results.json BENCH_baseline.json
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+_ROOT = Path(__file__).resolve().parent.parent
+
+# rows that gate PRs: the known perf cliffs (mixtral / new-axis tails), the
+# representative cold + warm table-2 rows, and the fig12 technique ladder.
+# Keep this list to rows that are deterministic in *work done* — wall-clock
+# still varies with runner load, hence TOLERANCE.
+GATED_ROWS = [
+    "table2_L1_llama3_8b",
+    "table2_L1_llama3_8b_warm",
+    "table2_M1_mixtral_8x7b",
+    "table2_M2_mixtral_8x22b",
+    "table2_E1_mixtral_8x7b_ep-moe-forward_cold",
+    "fig11c_layers_4",
+    "fig11c_layers_32",
+    "fig12_partition_seq",
+    "fig12_memo_stamp",
+]
+
+TOLERANCE = 1.25          # >25% slower than baseline fails
+MIN_GATED_US = 50_000.0   # skip gated rows whose baseline is <50ms (noise)
+FIG11C_MAX_RATIO = 4.0    # 8x layers in at most 4x time (memoization works)
+# runner-speed clamp: the calibration_spin row (a fixed pure-Python
+# workload) measures interpreter speed on each machine; gated ratios are
+# divided by results/baseline calibration so a slower CI runner does not
+# read as a code regression.  Clamped so a noisy calibration sample can
+# never mask (or invent) more than a 2x shift.
+CALIBRATION_ROW = "calibration_spin"
+CAL_CLAMP = (0.5, 2.0)
+
+
+def load_rows(path: Path) -> dict[str, float]:
+    data = json.loads(path.read_text())
+    if isinstance(data, dict) and "rows" in data:
+        if data.get("schema") != 2:
+            raise SystemExit(
+                f"{path.name}: unsupported schema {data.get('schema')!r} "
+                "(this checker understands schema 2)")
+        return data["rows"]
+    return data  # legacy v1: flat {name: us_per_call}
+
+
+def check(results: dict[str, float], baseline: dict[str, float]) -> int:
+    failures: list[str] = []
+    warnings: list[str] = []
+
+    speed = 1.0
+    cal_new, cal_old = (results.get(CALIBRATION_ROW),
+                        baseline.get(CALIBRATION_ROW))
+    if cal_new and cal_old:
+        speed = max(CAL_CLAMP[0], min(CAL_CLAMP[1], cal_new / cal_old))
+        print(f"ok   runner speed factor {speed:.2f} "
+              f"(calibration {cal_old/1e3:.0f}ms -> {cal_new/1e3:.0f}ms)")
+    elif baseline:
+        warnings.append("calibration_spin missing; raw wall-clock compare")
+
+    for name in GATED_ROWS:
+        new = results.get(name)
+        old = baseline.get(name)
+        if new is None:
+            failures.append(f"{name}: gated row missing from results")
+            continue
+        if old is None:
+            warnings.append(f"{name}: not in baseline (new row? refresh it)")
+            continue
+        if old < MIN_GATED_US:
+            warnings.append(f"{name}: baseline {old/1e3:.1f}ms < "
+                            f"{MIN_GATED_US/1e3:.0f}ms floor, skipped")
+            continue
+        ratio = new / (old * speed)
+        line = (f"{name}: {old/1e6:.2f}s -> {new/1e6:.2f}s "
+                f"({ratio:.2f}x speed-adjusted baseline)")
+        if ratio > TOLERANCE:
+            failures.append(f"{line} exceeds {TOLERANCE:.2f}x gate")
+        else:
+            print(f"ok   {line}")
+
+    lo, hi = results.get("fig11c_layers_4"), results.get("fig11c_layers_32")
+    if not lo or hi is None:
+        failures.append("fig11c rows missing from results")
+    else:
+        ratio = hi / lo
+        line = f"fig11c 32/4-layer ratio {ratio:.2f} (gate {FIG11C_MAX_RATIO})"
+        if ratio > FIG11C_MAX_RATIO:
+            failures.append(line + " exceeded")
+        else:
+            print(f"ok   {line}")
+
+    for w in warnings:
+        print(f"warn {w}")
+    for f in failures:
+        print(f"FAIL {f}")
+    return 1 if failures else 0
+
+
+def main() -> int:
+    ap = argparse.ArgumentParser(description=__doc__.splitlines()[0])
+    ap.add_argument("--results", type=Path,
+                    default=_ROOT / "BENCH_results.json")
+    ap.add_argument("--baseline", type=Path,
+                    default=_ROOT / "BENCH_baseline.json")
+    args = ap.parse_args()
+    if not args.results.exists():
+        print(f"FAIL results file {args.results} missing "
+              "(run `PYTHONPATH=src python benchmarks/run.py` first)")
+        return 1
+    if not args.baseline.exists():
+        print(f"warn baseline {args.baseline} missing; diff gate skipped")
+        results = load_rows(args.results)
+        return check(results, {})
+    return check(load_rows(args.results), load_rows(args.baseline))
+
+
+if __name__ == "__main__":
+    sys.exit(main())

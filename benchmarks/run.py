@@ -1,7 +1,9 @@
 """Benchmark harness (deliverable d): one module per paper table/figure.
 Prints ``name,us_per_call,derived`` CSV and writes ``BENCH_results.json``
-(machine-readable ``name -> us_per_call``) so the perf trajectory is
-recorded across PRs (CI uploads it as an artifact)."""
+(schema-versioned: ``{"schema": 2, "rows": {name -> us_per_call}}``) so the
+perf trajectory is recorded across PRs.  CI diffs it against the committed
+``BENCH_baseline.json`` with ``benchmarks/check_regression.py`` and fails
+the PR on a >25% regression of any gated row."""
 from __future__ import annotations
 
 import json
@@ -17,6 +19,26 @@ for p in (str(_ROOT), str(_ROOT / "src")):
         sys.path.insert(0, p)
 
 RESULTS_PATH = _ROOT / "BENCH_results.json"
+
+# bump when the results file layout changes; check_regression.py refuses to
+# compare files with mismatched schema versions
+SCHEMA = 2
+
+
+def _calibration_row() -> dict:
+    """A fixed pure-Python workload measuring *this runner's* interpreter
+    speed — the quantity that actually dominates the rule engine.
+    ``check_regression.py`` divides gated-row ratios by the calibration
+    ratio so a slower/faster CI runner does not read as a code change."""
+    import time
+
+    t0 = time.perf_counter()
+    acc = 0
+    for i in range(2_000_000):
+        acc += i ^ (i >> 3)
+    dt = time.perf_counter() - t0
+    return {"name": "calibration_spin", "us_per_call": dt * 1e6,
+            "derived": f"acc={acc & 0xffff}"}
 
 
 def main() -> None:
@@ -40,6 +62,9 @@ def main() -> None:
     print("name,us_per_call,derived")
     results: dict[str, float] = {}
     failed = False
+    row = _calibration_row()
+    print(f"{row['name']},{row['us_per_call']:.1f},{row['derived']}")
+    results[row["name"]] = round(float(row["us_per_call"]), 1)
     for label, mod in suites:
         try:
             for row in mod.run():
@@ -50,8 +75,10 @@ def main() -> None:
             failed = True
             print(f"{label}_FAILED,0,{type(e).__name__}: {e}")
             traceback.print_exc(file=sys.stderr)
-    RESULTS_PATH.write_text(json.dumps(results, indent=2, sort_keys=True) + "\n")
-    print(f"# wrote {RESULTS_PATH.name} ({len(results)} entries)", file=sys.stderr)
+    payload = {"schema": SCHEMA, "rows": results}
+    RESULTS_PATH.write_text(json.dumps(payload, indent=2, sort_keys=True) + "\n")
+    print(f"# wrote {RESULTS_PATH.name} ({len(results)} rows, schema {SCHEMA})",
+          file=sys.stderr)
     sys.exit(1 if failed else 0)
 
 

@@ -20,7 +20,7 @@ reasoning).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Optional, Sequence
 
 import numpy as np
@@ -40,8 +40,22 @@ def _prod(xs: Sequence[int]) -> int:
 # interned identity layouts (one per shape — the most-constructed layout)
 _IDENTITY_CACHE: dict[tuple[int, ...], "Layout"] = {}
 
+# general intern table, populated on unpickle: the process shard backend
+# ships layouts between processes, and reconstructing through this table
+# dedups them on arrival (one object per distinct layout per process)
+_INTERN_CACHE: dict[tuple, "Layout"] = {}
 
-@dataclass(frozen=True)
+
+def _intern_layout(atoms, src_groups, perm, dst_groups) -> "Layout":
+    key = (atoms, src_groups, perm, dst_groups)
+    lay = _INTERN_CACHE.get(key)
+    if lay is None:
+        lay = Layout(atoms, src_groups, perm, dst_groups)
+        _INTERN_CACHE[key] = lay
+    return lay
+
+
+@dataclass(frozen=True, slots=True)
 class Layout:
     """A bijective layout transform ``src_shape -> dst_shape``.
 
@@ -55,13 +69,25 @@ class Layout:
     src_groups: tuple[int, ...]
     perm: tuple[int, ...]
     dst_groups: tuple[int, ...]
+    # first-use caches (slots, so named fields rather than __dict__ entries);
+    # _kid is the process-local fact-key layout id assigned by
+    # repro.core.relations — all four are excluded from equality, repr and
+    # pickles (__reduce__ rebuilds from the four defining tuples)
+    _src_shape: Optional[tuple] = field(default=None, init=False,
+                                        compare=False, repr=False)
+    _dst_shape: Optional[tuple] = field(default=None, init=False,
+                                        compare=False, repr=False)
+    _hash: Optional[int] = field(default=None, init=False, compare=False,
+                                 repr=False)
+    _kid: Optional[int] = field(default=None, init=False, compare=False,
+                                repr=False)
 
     # -- derived -------------------------------------------------------------
     # src_shape/dst_shape/hash are recomputed millions of times on the rule
     # hot path; Layout is frozen, so cache them on first use.
     @property
     def src_shape(self) -> tuple[int, ...]:
-        v = self.__dict__.get("_src_shape")
+        v = self._src_shape
         if v is None:
             v = self._group_shape(self.atoms, self.src_groups, range(len(self.atoms)))
             object.__setattr__(self, "_src_shape", v)
@@ -69,18 +95,22 @@ class Layout:
 
     @property
     def dst_shape(self) -> tuple[int, ...]:
-        v = self.__dict__.get("_dst_shape")
+        v = self._dst_shape
         if v is None:
             v = self._group_shape(self.atoms, self.dst_groups, self.perm)
             object.__setattr__(self, "_dst_shape", v)
         return v
 
     def __hash__(self) -> int:
-        h = self.__dict__.get("_hash")
+        h = self._hash
         if h is None:
             h = hash((self.atoms, self.src_groups, self.perm, self.dst_groups))
             object.__setattr__(self, "_hash", h)
         return h
+
+    def __reduce__(self):
+        return (_intern_layout,
+                (self.atoms, self.src_groups, self.perm, self.dst_groups))
 
     @staticmethod
     def _group_shape(atoms, groups, order) -> tuple[int, ...]:

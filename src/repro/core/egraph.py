@@ -18,24 +18,56 @@ egglog layers Datalog over e-graphs.  The e-graph's job here is:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
 from typing import Any, Callable, Iterable, Optional
 
 from .ir import COMMUTATIVE, Graph, Node
 
 
-@dataclass(frozen=True)
 class ENode:
-    op: str
-    children: tuple[int, ...]
-    params: tuple
-    shape: tuple[int, ...]
-    dtype: str
+    """An e-node: ``(op, child e-class ids, params, shape, dtype)``.
+
+    Hand-rolled (``__slots__`` + precomputed hash) rather than a dataclass:
+    e-nodes are hashed on every hashcons probe and re-canonicalization, and
+    the cached hash removes the dominant cost of congruence maintenance on
+    large graphs."""
+
+    __slots__ = ("op", "children", "params", "shape", "dtype", "_hash")
+
+    def __init__(self, op: str, children: tuple[int, ...], params: tuple,
+                 shape: tuple[int, ...], dtype: str) -> None:
+        self.op = op
+        self.children = children
+        self.params = params
+        self.shape = shape
+        self.dtype = dtype
+        self._hash = hash((op, children, params, shape, dtype))
+
+    def __hash__(self) -> int:
+        return self._hash
+
+    def __eq__(self, other: object) -> bool:
+        if self is other:
+            return True
+        return (
+            isinstance(other, ENode)
+            and self._hash == other._hash
+            and self.op == other.op
+            and self.children == other.children
+            and self.params == other.params
+            and self.shape == other.shape
+            and self.dtype == other.dtype
+        )
+
+    def __repr__(self) -> str:
+        return (f"ENode({self.op!r}, {self.children!r}, {self.params!r}, "
+                f"{self.shape!r}, {self.dtype!r})")
 
     def canon(self, find: Callable[[int], int]) -> "ENode":
         ch = tuple(find(c) for c in self.children)
-        if self.op in COMMUTATIVE and len(ch) == 2:
-            ch = tuple(sorted(ch))
+        if self.op in COMMUTATIVE and len(ch) == 2 and ch[0] > ch[1]:
+            ch = (ch[1], ch[0])
+        if ch == self.children:
+            return self
         return ENode(self.op, ch, self.params, self.shape, self.dtype)
 
 
@@ -44,6 +76,11 @@ class EGraph:
         self._parent: list[int] = []
         self._hashcons: dict[ENode, int] = {}
         self._class_nodes: dict[int, list[ENode]] = {}
+        # use-lists (egg's ``parents``): class id -> [(enode, owner class)]
+        # for every e-node with a child in that class.  Repair after a merge
+        # then touches only the e-nodes that *use* the absorbed class instead
+        # of re-canonicalizing the entire hashcons.
+        self._uses: dict[int, list[tuple[ENode, int]]] = {}
         self._worklist: list[int] = []
         self.version = 0  # bumped on every merge (saturation detection)
 
@@ -71,6 +108,8 @@ class EGraph:
         ec = self._new_class()
         self._hashcons[enode] = ec
         self._class_nodes[ec].append(enode)
+        for child in set(enode.children):
+            self._uses.setdefault(child, []).append((enode, ec))
         return ec
 
     def lookup(self, enode: ENode) -> Optional[int]:
@@ -84,38 +123,42 @@ class EGraph:
         if a == b:
             return a
         self.version += 1
-        # union by size of node list
-        if len(self._class_nodes.get(a, ())) < len(self._class_nodes.get(b, ())):
+        # union by use-list size: repair cost is proportional to the
+        # absorbed side's uses, so absorb the lightly-used class
+        if len(self._uses.get(a, ())) < len(self._uses.get(b, ())):
             a, b = b, a
         self._parent[b] = a
         self._class_nodes.setdefault(a, []).extend(self._class_nodes.pop(b, []))
-        self._worklist.append(a)
+        # the absorbed root's id is the use-list key to repair: every e-node
+        # with a child in b is now non-canonical
+        self._worklist.append(b)
         return a
 
     def rebuild(self) -> None:
         """Restore the congruence invariant after merges."""
         while self._worklist:
             todo, self._worklist = self._worklist, []
-            seen: set[int] = set()
-            for ec in todo:
-                ec = self.find(ec)
-                if ec in seen:
-                    continue
-                seen.add(ec)
-                self._repair(ec)
+            for absorbed in todo:
+                self._repair(absorbed)
 
-    def _repair(self, _ec: int) -> None:
-        # Re-canonicalize the entire hashcons; merge congruent duplicates.
-        # O(n) per repair round but n stays small (per-layer subgraphs).
-        new_hash: dict[ENode, int] = {}
-        for enode, ec in list(self._hashcons.items()):
+    def _repair(self, absorbed: int) -> None:
+        # Re-canonicalize only the e-nodes USING the absorbed class (egg's
+        # repair): pop each stale hashcons entry, re-insert under the
+        # canonical key, and merge congruent duplicates (which may enqueue
+        # further repairs).
+        for enode, ec in self._uses.pop(absorbed, ()):  # each absorbed id repairs once
+            self._hashcons.pop(enode, None)
             canon = enode.canon(self.find)
             ec = self.find(ec)
-            other = new_hash.get(canon)
-            if other is not None and self.find(other) != ec:
-                ec = self.merge(other, ec)
-            new_hash[canon] = ec
-        self._hashcons = new_hash
+            other = self._hashcons.get(canon)
+            if other is not None:
+                other = self.find(other)
+                if other != ec:
+                    ec = self.merge(other, ec)
+            self._hashcons[canon] = ec
+            if canon is not enode:
+                for child in set(canon.children):
+                    self._uses.setdefault(child, []).append((canon, ec))
 
     # -- queries --------------------------------------------------------------
     def enodes(self, ec: int) -> list[ENode]:

@@ -28,7 +28,7 @@ These power bug localization (§5.3) and bug categorization (§7.3).
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+from dataclasses import dataclass, field
 from typing import Iterable, Optional
 
 from .bijection import Layout
@@ -39,8 +39,35 @@ PARTIAL = "partial"
 SLICEGRP = "slicegrp"
 LOOPRED = "loopred"
 
+# fact kinds interned to small ints: index keys pack (node_id, kind_id) into
+# one int instead of hashing a (int, str) tuple on every store read/write
+KINDS = (DUP, SHARD, PARTIAL, SLICEGRP, LOOPRED)
+KIND_ID = {k: i for i, k in enumerate(KINDS)}
+_KIND_BITS = 3  # 2**3 >= len(KINDS); key = (node_id << 3) | kind_id
 
-@dataclass(frozen=True)
+# layouts interned to small ints for fact keys.  The interning key is
+# (atoms, perm, dst_groups) — deliberately EXCLUDING src_groups — so two
+# facts whose layouts differ only in source grouping keep deduplicating to
+# one fact, exactly as the historical tuple-valued key did.  Ids are
+# process-local (assigned in first-use order): fact keys must never be
+# compared across processes — the process shard backend re-keys facts on
+# the parent side after unpickling.
+_LAYOUT_KEY_IDS: dict[tuple, int] = {}
+
+
+def _layout_key_id(lay: Layout) -> int:
+    kid = lay._kid
+    if kid is None:
+        t = (lay.atoms, lay.perm, lay.dst_groups)
+        kid = _LAYOUT_KEY_IDS.get(t)
+        if kid is None:
+            kid = len(_LAYOUT_KEY_IDS)
+            _LAYOUT_KEY_IDS[t] = kid
+        object.__setattr__(lay, "_kid", kid)
+    return kid
+
+
+@dataclass(frozen=True, slots=True)
 class Fact:
     kind: str
     base: int  # baseline node id
@@ -52,19 +79,21 @@ class Fact:
     nchunk: int = 0  # slicegrp/loopred: chunks per rank (n)
     index: int = -1  # slicegrp: local chunk index i
     idxset: frozenset = frozenset()  # loopred: accumulated local indices
+    # dedup-key cache; process-local (holds an interned layout id), so it is
+    # excluded from pickles via __reduce__ and recomputed on arrival
+    _key: Optional[tuple] = field(default=None, init=False, compare=False,
+                                  repr=False)
 
     def key(self) -> tuple:
         # hot path (every store lookup/add dedups on it): computed once
-        k = self.__dict__.get("_key")
+        k = self._key
         if k is None:
             k = (
                 self.kind,
                 self.base,
                 self.dist,
                 self.size,
-                self.layout.atoms,
-                self.layout.perm,
-                self.layout.dst_groups,
+                _layout_key_id(self.layout),
                 self.reduce_op,
                 self.dim,
                 self.nchunk,
@@ -73,6 +102,11 @@ class Fact:
             )
             object.__setattr__(self, "_key", k)
         return k
+
+    def __reduce__(self):
+        return (Fact, (self.kind, self.base, self.dist, self.size,
+                       self.layout, self.reduce_op, self.dim, self.nchunk,
+                       self.index, self.idxset))
 
     def moved(self, base: int, dist: int) -> "Fact":
         """Copy with renamed endpoints (fast-path for memo replay; avoids
@@ -125,9 +159,12 @@ class RelStore:
     def __init__(self) -> None:
         self.by_dist: dict[int, list[Fact]] = {}
         self.by_base: dict[int, list[Fact]] = {}
-        # (dist, kind) index: rule bodies that consume one fact kind read
-        # this instead of linearly filtering the full per-node lists
-        self.by_dist_kind: dict[tuple[int, str], list[Fact]] = {}
+        # (dist, kind) and (base, kind) indexes: rule bodies that consume one
+        # fact kind read these instead of linearly filtering the per-node
+        # lists.  Keys are packed ints — (node_id << _KIND_BITS) | kind_id —
+        # which hash/compare as machine ints instead of (int, str) tuples.
+        self.by_dist_kind: dict[int, list[Fact]] = {}
+        self.by_base_kind: dict[int, list[Fact]] = {}
         self._seen: set[tuple] = set()
         self.diagnostics: list[Diagnostic] = []
         self.num_derived = 0
@@ -141,9 +178,13 @@ class RelStore:
         self.covered_nodes: set[int] = set()
 
     def _index(self, fact: Fact) -> None:
+        kid = KIND_ID[fact.kind]
         self.by_dist.setdefault(fact.dist, []).append(fact)
         self.by_base.setdefault(fact.base, []).append(fact)
-        self.by_dist_kind.setdefault((fact.dist, fact.kind), []).append(fact)
+        self.by_dist_kind.setdefault((fact.dist << _KIND_BITS) | kid,
+                                     []).append(fact)
+        self.by_base_kind.setdefault((fact.base << _KIND_BITS) | kid,
+                                     []).append(fact)
         self.num_derived += 1
 
     def add(self, fact: Fact) -> bool:
@@ -176,13 +217,13 @@ class RelStore:
         return self.by_dist.get(dist, [])
 
     def facts_kind(self, dist: int, kind: str) -> list[Fact]:
-        return self.by_dist_kind.get((dist, kind), [])
+        return self.by_dist_kind.get((dist << _KIND_BITS) | KIND_ID[kind], [])
 
     def facts_for_base(self, base: int) -> list[Fact]:
         return self.by_base.get(base, [])
 
     def facts_for_base_kind(self, base: int, kind: str) -> list[Fact]:
-        return [f for f in self.by_base.get(base, []) if f.kind == kind]
+        return self.by_base_kind.get((base << _KIND_BITS) | KIND_ID[kind], [])
 
     def verified(self, dist: int) -> bool:
         return bool(self.by_dist.get(dist))

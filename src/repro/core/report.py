@@ -71,10 +71,103 @@ class PhaseTimings:
     stamp_s: float = 0.0  # periodicity validation + IR cloning
     rules_s: float = 0.0  # partitioning + rule evaluation to fixpoint
     localize_s: float = 0.0  # output checks + bug localization
+    # per-rule / per-op-family flame summary (RuleProfiler.summary()); only
+    # populated under VerifyOptions(profile=True) — off by default because
+    # the per-invocation clock reads cost ~15% on the rules phase
+    profile: Optional[dict] = None
 
     @property
     def total_s(self) -> float:
         return self.trace_s + self.stamp_s + self.rules_s + self.localize_s
+
+
+def op_family(op: str) -> str:
+    """Coarse op family used by the profiler's per-family rollup."""
+    from .ir import COLLECTIVES, ELEMENTWISE, LAYOUT_OPS, LEAF_OPS, REDUCES
+
+    if op in ELEMENTWISE:
+        return "elementwise"
+    if op in LAYOUT_OPS or op in ("broadcast", "convert"):
+        return "layout"
+    if op in COLLECTIVES:
+        return "collective"
+    if op in REDUCES or op in ("cumsum", "argmax", "sort", "top_k"):
+        return "reduce"
+    if op in LEAF_OPS:
+        return "leaf"
+    if op in ("dot", "conv"):
+        return "contraction"
+    if op in ("slice", "concat", "pad", "gather", "scatter", "dynamic_slice",
+              "dynamic_update_slice", "rev"):
+        return "structure"
+    return "other"
+
+
+class RuleProfiler:
+    """Cumulative per-rule and per-op-family time/invocation counters.
+
+    Attached to a :class:`~repro.core.rules.propagator.Propagator` under
+    ``VerifyOptions(profile=True)``; ``dispatch`` wraps each rule firing in
+    a monotonic-clock sample.  Thread-backend shard clones get their own
+    profiler, merged after the stage barrier (monotonic deltas are additive
+    across threads).  ``summary()`` is the JSON flame summary embedded in
+    ``Report.timings.profile``."""
+
+    __slots__ = ("rule_time", "rule_count", "op_time", "op_count")
+
+    def __init__(self) -> None:
+        self.rule_time: dict[str, float] = {}
+        self.rule_count: dict[str, int] = {}
+        self.op_time: dict[str, float] = {}
+        self.op_count: dict[str, int] = {}
+
+    def record(self, rule: str, op: str, dt: float) -> None:
+        self.rule_time[rule] = self.rule_time.get(rule, 0.0) + dt
+        self.rule_count[rule] = self.rule_count.get(rule, 0) + 1
+        fam = op_family(op)
+        self.op_time[fam] = self.op_time.get(fam, 0.0) + dt
+        self.op_count[fam] = self.op_count.get(fam, 0) + 1
+
+    def merge(self, other: "RuleProfiler") -> None:
+        for k, v in other.rule_time.items():
+            self.rule_time[k] = self.rule_time.get(k, 0.0) + v
+        for k, c in other.rule_count.items():
+            self.rule_count[k] = self.rule_count.get(k, 0) + c
+        for k, v in other.op_time.items():
+            self.op_time[k] = self.op_time.get(k, 0.0) + v
+        for k, c in other.op_count.items():
+            self.op_count[k] = self.op_count.get(k, 0) + c
+
+    def summary(self) -> dict:
+        rules = {
+            name: {"time_s": round(self.rule_time[name], 6),
+                   "count": self.rule_count[name]}
+            for name in sorted(self.rule_time,
+                               key=lambda n: -self.rule_time[n])
+        }
+        ops = {
+            fam: {"time_s": round(self.op_time[fam], 6),
+                  "count": self.op_count[fam]}
+            for fam in sorted(self.op_time, key=lambda f: -self.op_time[f])
+        }
+        return {"rules": rules, "op_families": ops}
+
+    @staticmethod
+    def merge_summaries(summaries: list) -> Optional[dict]:
+        """Combine per-scenario ``summary()`` dicts (Session multi-scenario
+        aggregation)."""
+        summaries = [s for s in summaries if s]
+        if not summaries:
+            return None
+        out: dict = {"rules": {}, "op_families": {}}
+        for s in summaries:
+            for section in ("rules", "op_families"):
+                for name, row in s.get(section, {}).items():
+                    acc = out[section].setdefault(
+                        name, {"time_s": 0.0, "count": 0})
+                    acc["time_s"] = round(acc["time_s"] + row["time_s"], 6)
+                    acc["count"] += row["count"]
+        return out
 
 
 @dataclass

@@ -40,10 +40,43 @@ import heapq
 from contextlib import contextmanager
 from typing import Iterable, Optional
 
-from ..relations import Diagnostic, Fact, RelStore
+from ..relations import _KIND_BITS, KIND_ID, Diagnostic, Fact, RelStore
 
 # minimum seeded nodes before a restricted run fans out on the pool
 _PARALLEL_MIN_NODES = 24
+
+# partition helpers, bound lazily on first parallel sweep: a module-level
+# import would be circular (partition.py imports this package), so they are
+# hoisted into module globals once instead of re-imported on every sweep
+_stage_topologies = None
+_topological_stages = None
+
+
+def _partition_helpers():
+    global _stage_topologies, _topological_stages
+    if _stage_topologies is None:
+        from ..partition import stage_topologies, topological_stages
+
+        _stage_topologies = stage_topologies
+        _topological_stages = topological_stages
+    return _stage_topologies, _topological_stages
+
+
+def fork_available() -> bool:
+    import multiprocessing
+
+    return "fork" in multiprocessing.get_all_start_methods()
+
+
+def _process_pool(workers: int) -> _fut.ProcessPoolExecutor:
+    """Worker-process pool for the process shard backend.  Prefers the fork
+    context: workers inherit the already-imported rule modules instead of
+    re-importing the package (which would drag jax in under spawn)."""
+    import multiprocessing
+
+    ctx = (multiprocessing.get_context("fork")
+           if fork_available() else multiprocessing.get_context())
+    return _fut.ProcessPoolExecutor(max_workers=workers, mp_context=ctx)
 
 
 class _ShardStore:
@@ -59,7 +92,12 @@ class _ShardStore:
         self._c = committed
         self.by_dist: dict[int, list[Fact]] = {}
         self.by_base: dict[int, list[Fact]] = {}
-        self.by_dist_kind: dict[tuple[int, str], list[Fact]] = {}
+        # packed-int (node_id << _KIND_BITS) | kind_id keys, mirroring the
+        # committed RelStore's columnar indexes — including the (base, kind)
+        # overlay its committed counterpart has (facts_for_base_kind used to
+        # be an O(n) scan over the merged per-base list)
+        self.by_dist_kind: dict[int, list[Fact]] = {}
+        self.by_base_kind: dict[int, list[Fact]] = {}
         self._seen: set[tuple] = set()
         self.new_facts: list[Fact] = []
         self.diagnostics: list[Diagnostic] = []
@@ -72,9 +110,13 @@ class _ShardStore:
         if k in self._seen or k in self._c._seen:
             return False
         self._seen.add(k)
+        kid = KIND_ID[fact.kind]
         self.by_dist.setdefault(fact.dist, []).append(fact)
         self.by_base.setdefault(fact.base, []).append(fact)
-        self.by_dist_kind.setdefault((fact.dist, fact.kind), []).append(fact)
+        self.by_dist_kind.setdefault((fact.dist << _KIND_BITS) | kid,
+                                     []).append(fact)
+        self.by_base_kind.setdefault((fact.base << _KIND_BITS) | kid,
+                                     []).append(fact)
         self.new_facts.append(fact)
         self.num_derived += 1
         return True
@@ -85,7 +127,7 @@ class _ShardStore:
         return base + loc if loc else base
 
     def facts_kind(self, dist: int, kind: str) -> list[Fact]:
-        loc = self.by_dist_kind.get((dist, kind))
+        loc = self.by_dist_kind.get((dist << _KIND_BITS) | KIND_ID[kind])
         base = self._c.facts_kind(dist, kind)
         return base + loc if loc else base
 
@@ -95,7 +137,9 @@ class _ShardStore:
         return com + loc if loc else com
 
     def facts_for_base_kind(self, base: int, kind: str) -> list[Fact]:
-        return [f for f in self.facts_for_base(base) if f.kind == kind]
+        loc = self.by_base_kind.get((base << _KIND_BITS) | KIND_ID[kind])
+        com = self._c.facts_for_base_kind(base, kind)
+        return com + loc if loc else com
 
     def verified(self, dist: int) -> bool:
         return bool(self._c.by_dist.get(dist)) or bool(self.by_dist.get(dist))
@@ -105,10 +149,14 @@ class _ShardStore:
 
 
 class WorklistEngine:
-    def __init__(self, prop, workers: int = 0, pool=None) -> None:
+    def __init__(self, prop, workers: int = 0, pool=None,
+                 backend: str = "thread") -> None:
         self.prop = prop
         self.workers = int(workers or 0)
+        self.backend = backend
         self._ext_pool = pool  # session-owned: survives close()
+        self._own_pool = None  # engine-owned: shut down by close()
+        self._offload = None  # ProcessOffload when the process backend runs
         self._consumers = prop.dist.consumer_index()
         # nodes to (re)visit outside the active run, kind-tagged
         self.pending: dict[int, set[str]] = {}
@@ -118,17 +166,42 @@ class WorklistEngine:
         self._allowed: Optional[set[int]] = None
         self._active = False
         self._settling: Optional[set[int]] = None
-        self._pool: Optional[_fut.ThreadPoolExecutor] = None
         prop.store.listeners.append(self._on_facts)
 
     @property
     def rule_invocations(self) -> int:
         return self.prop.rule_invocations
 
+    def _get_pool(self):
+        if self._ext_pool is not None:
+            return self._ext_pool
+        if self._own_pool is None:
+            if self.backend == "process":
+                self._own_pool = _process_pool(self.workers)
+            else:
+                self._own_pool = _fut.ThreadPoolExecutor(
+                    max_workers=self.workers)
+        return self._own_pool
+
     def close(self) -> None:
-        if self._pool is not None and self._pool is not self._ext_pool:
-            self._pool.shutdown(wait=True)
-        self._pool = None
+        # only the engine-owned pool is shut down; an externally-owned
+        # (session) pool is never touched, and no reference to it lingers
+        self._offload = None
+        if self._own_pool is not None:
+            self._own_pool.shutdown(wait=True, cancel_futures=True)
+            self._own_pool = None
+
+    # -------------------------------------------------------- process backend
+    def start_offload(self) -> None:
+        """Process backend: plan the distributed graph's small-cone chunks
+        and submit them to the worker pool (see
+        :mod:`repro.core.rules.parshard`).  Subsequent :meth:`run` calls
+        merge finished chunks before seeding — blocking only on chunks a
+        restricted run actually needs."""
+        if self.workers > 1 and self._offload is None:
+            from .parshard import ProcessOffload
+
+            self._offload = ProcessOffload(self, self._get_pool())
 
     # ------------------------------------------------------------ listeners
     def _on_facts(self, facts: Iterable[Fact]) -> None:
@@ -175,6 +248,11 @@ class WorklistEngine:
         an unrestricted run seeds every not-yet-visited node plus the
         pending cross-boundary frontier."""
         dist = self.prop.dist
+        if self._offload is not None:
+            # merge finished chunks first (their nodes then count as
+            # visited); block on the chunks this run's nodes depend on —
+            # an unrestricted run waits for everything outstanding
+            self._offload.drain(nodes if nodes is not None else None)
         if nodes is None:
             allowed = None
             seeds: dict[int, Optional[set[str]]] = {
@@ -182,8 +260,9 @@ class WorklistEngine:
             }
         else:
             allowed = set(nodes)
-            seeds = {n: None for n in allowed}
-        if (self.workers > 1 and allowed is not None
+            seeds = {n: None for n in allowed if n not in self.visited}
+        if (self.workers > 1 and self.backend != "process"
+                and allowed is not None
                 and len(seeds) >= _PARALLEL_MIN_NODES):
             self._sweep_parallel(sorted(seeds))
             seeds = {}
@@ -222,11 +301,8 @@ class WorklistEngine:
         stores merged through one add_batch per shard.  Facts derived here
         mark consumers into ``pending``; the serial drain finishes the
         incremental tail."""
-        from ...core.partition import stage_topologies, topological_stages
-
-        if self._pool is None:
-            self._pool = self._ext_pool or _fut.ThreadPoolExecutor(
-                max_workers=self.workers)
+        stage_topologies, topological_stages = _partition_helpers()
+        pool = self._get_pool()
         prop, dist = self.prop, self.prop.dist
         prop.prewarm_shared()
         store = prop.store
@@ -243,10 +319,12 @@ class WorklistEngine:
                         sprop.dispatch(dist[nid])
                     return sprop
 
-                for sprop in list(self._pool.map(run_shard, shards)):
+                for sprop in list(pool.map(run_shard, shards)):
                     store.add_batch(sprop.store.new_facts)
                     store.diagnostics.extend(sprop.store.diagnostics)
                     prop.rule_invocations += sprop.rule_invocations
+                    if prop.profiler is not None:
+                        prop.profiler.merge(sprop.profiler)
             # marks targeting this stage came from earlier stages' facts,
             # which the dispatch above already saw: drop them so the serial
             # drain doesn't re-visit the whole layer (facts derived in THIS

@@ -53,6 +53,9 @@ class Propagator:
         self.base_eg = base_eg or GraphEGraph(base, tag="base")
         self.registry = registry or DEFAULT_REGISTRY
         self.rule_invocations = 0
+        # RuleProfiler under VerifyOptions(profile=True); None keeps the
+        # dispatch hot path clock-free
+        self.profiler = None
         self._loopred_base_cache: dict[tuple, Optional[int]] = {}
         self._ec_consumers: Optional[dict[int, list[int]]] = None
         self._engine = None
@@ -75,11 +78,26 @@ class Propagator:
         """Fire the registered rules for ``node``.  With ``kinds`` given,
         fire only rules consuming one of those fact kinds (semi-naive
         re-visit after the node's inputs gained facts of those kinds)."""
+        if self.profiler is not None:
+            return self._dispatch_profiled(node, kinds)
         for rule in self.registry.rules_for(node.op):
             if kinds is not None and rule.consumes and not (rule.consumes & kinds):
                 continue
             self.rule_invocations += 1
             rule.fn(self, node)
+
+    def _dispatch_profiled(self, node: Node,
+                           kinds: Optional[frozenset] = None) -> None:
+        from time import perf_counter
+
+        prof = self.profiler
+        for rule in self.registry.rules_for(node.op):
+            if kinds is not None and rule.consumes and not (rule.consumes & kinds):
+                continue
+            self.rule_invocations += 1
+            t0 = perf_counter()
+            rule.fn(self, node)
+            prof.record(rule.name, node.op, perf_counter() - t0)
 
     def run(self, nodes: Optional[Iterable[int]] = None, max_passes: int = 30) -> None:
         """Pass-based evaluation to fixpoint (reference engine)."""
@@ -116,6 +134,10 @@ class Propagator:
         p.store = store
         p.rule_invocations = 0
         p._engine = None
+        if self.profiler is not None:
+            from ..report import RuleProfiler
+
+            p.profiler = RuleProfiler()  # merged after the stage barrier
         return p
 
     def worklist_engine(self):

@@ -55,6 +55,13 @@ class VerifyOptions:
     # worklist engine runs its initial per-layer sweep on shard-local fact
     # overlays merged through RelStore.add_batch.  0/1 = serial.
     parallel_workers: int = 0
+    # worker backend for the worklist engine's parallel sweep:
+    #   "thread"  — stage-sharded thread pool (GIL-bound; cheap to ship)
+    #   "process" — picklable chunk work units on a ProcessPoolExecutor
+    #               (repro.core.rules.parshard): actually parallel
+    #   "auto"    — process when workers > 1, fork is available, and the
+    #               machine has cores to fan out onto; thread otherwise
+    parallel_backend: str = "auto"
     max_passes: int = 30  # pass engine only
     axis: str = "model"
     # "worklist": semi-naive incremental evaluation (default);
@@ -65,6 +72,32 @@ class VerifyOptions:
     # points (repro.verify / verify_model_tp / verify_decode_tp);
     # verify_graphs receives already-built graphs.
     stamp: bool = True
+    # per-rule / per-op-family profiling into Report.timings.profile
+    # (RuleProfiler); off by default — it wraps every rule firing in
+    # monotonic clock reads
+    profile: bool = False
+
+
+def resolve_backend(options: "VerifyOptions") -> str:
+    """The concrete worker backend for these options ("thread"|"process").
+
+    Shared by ``verify_graphs`` and ``Session._get_pool`` so both pick the
+    same pool flavor for a given options object.  "auto" falls back to
+    "thread" on single-core machines: worker processes there only add
+    fork + pickling overhead with no CPU to overlap onto.  An explicit
+    "process" is always honored (parity tests and benchmarks pin it)."""
+    backend = options.parallel_backend
+    if backend == "auto":
+        import os
+
+        from .rules.engine import fork_available
+
+        return ("process" if options.parallel_workers > 1 and fork_available()
+                and (os.cpu_count() or 1) > 1 else "thread")
+    if backend not in ("thread", "process"):
+        raise ValueError(
+            f"unknown parallel_backend {backend!r}: thread|process|auto")
+    return backend
 
 
 def _output_ok(store: RelStore, b_out: int, d_out: int, spec: OutputSpec, size: int) -> bool:
@@ -262,8 +295,14 @@ def verify_graphs(
     timings = timings if timings is not None else PhaseTimings()
     if options.engine not in ("worklist", "passes"):
         raise ValueError(f"unknown engine {options.engine!r}: worklist|passes")
+    backend = resolve_backend(options)
     prop = Propagator(base, dist, size, axis=options.axis)
-    engine = (WorklistEngine(prop, workers=options.parallel_workers, pool=pool)
+    if options.profile:
+        from .report import RuleProfiler
+
+        prop.profiler = RuleProfiler()
+    engine = (WorklistEngine(prop, workers=options.parallel_workers,
+                             pool=pool, backend=backend)
               if options.engine == "worklist" else None)
     for f in input_facts:
         b, d = base_inputs[f.base_index], dist_inputs[f.dist_index]
@@ -273,6 +312,9 @@ def verify_graphs(
             prop.register_shard(b, d, f.dim)
         else:
             raise ValueError(f.kind)
+    if (engine is not None and backend == "process"
+            and options.parallel_workers > 1):
+        engine.start_offload()
     memo = None
     try:
         if options.partition:
@@ -295,6 +337,8 @@ def verify_graphs(
             engine.close()
     t_rules = time.perf_counter()
     timings.rules_s = t_rules - t0
+    if prop.profiler is not None:
+        timings.profile = prop.profiler.summary()
 
     specs = list(output_specs or [OutputSpec()] * len(dist.outputs))
     outputs_ok = [

@@ -79,6 +79,16 @@ def build_parser() -> argparse.ArgumentParser:
                     default="worklist")
     ap.add_argument("--workers", type=int, default=0,
                     help="parallel rewriting workers (0 = serial)")
+    ap.add_argument("--backend", choices=("auto", "thread", "process"),
+                    default="auto",
+                    help="shard backend for --workers > 1: 'process' ships "
+                         "picklable work units to a worker-process pool "
+                         "(true parallelism), 'thread' uses the in-process "
+                         "overlay sweep, 'auto' picks process when fork is "
+                         "available")
+    ap.add_argument("--profile", action="store_true",
+                    help="collect per-rule / per-op-family timings into the "
+                         "report (timings.profile) and print the top rules")
     ap.add_argument("--no-stamp", action="store_true",
                     help="disable layer stamping (full trace)")
     ap.add_argument("--json", metavar="PATH", default=None,
@@ -264,6 +274,8 @@ def main(argv: Optional[list] = None) -> int:
 
     options = VerifyOptions(engine=args.engine,
                             parallel_workers=args.workers,
+                            parallel_backend=args.backend,
+                            profile=args.profile,
                             stamp=not args.no_stamp)
     try:
         with Session(options=options) as session:
@@ -287,4 +299,20 @@ def main(argv: Optional[list] = None) -> int:
             fh.write(report.to_json(indent=2) + "\n")
     if not args.quiet:
         print(report.summary(), file=summary_stream)
+        if args.profile and report.timings.profile:
+            print(_profile_lines(report.timings.profile), file=summary_stream)
     return EXIT_VERIFIED if report.verified else EXIT_UNVERIFIED
+
+
+def _profile_lines(profile: dict, top: int = 10) -> str:
+    lines = ["profile (top rules by cumulative time):"]
+    for name, row in list(profile.get("rules", {}).items())[:top]:
+        lines.append(f"  {name:<28} {row['time_s']*1e3:9.2f} ms"
+                     f"  x{row['count']}")
+    fams = profile.get("op_families", {})
+    if fams:
+        lines.append("profile (op families):")
+        for name, row in list(fams.items())[:top]:
+            lines.append(f"  {name:<28} {row['time_s']*1e3:9.2f} ms"
+                         f"  x{row['count']}")
+    return "\n".join(lines)

@@ -30,8 +30,9 @@ from typing import Optional
 
 from repro.configs import get_config
 from repro.core.partition import TemplateCache
-from repro.core.report import CacheStats, PhaseTimings, Report, rank_bug_sites
-from repro.core.verifier import VerifyOptions, verify_graphs
+from repro.core.report import (CacheStats, PhaseTimings, Report, RuleProfiler,
+                               rank_bug_sites)
+from repro.core.verifier import VerifyOptions, resolve_backend, verify_graphs
 
 from .plan import Plan, Scenario
 from .scenarios import GraphPair, build_pair
@@ -65,6 +66,11 @@ class Session:
         self._base_traces: dict[tuple, tuple] = {}
         self._pool: Optional[_fut.ThreadPoolExecutor] = None
         self._pool_size = 0
+        # persistent process pool for the "process" shard backend: worker
+        # processes cache unpickled graph pairs, so reuse across calls
+        # amortizes both fork cost and pair shipping
+        self._ppool: Optional[_fut.ProcessPoolExecutor] = None
+        self._ppool_size = 0
 
     # ------------------------------------------------------------ lifecycle
     def close(self) -> None:
@@ -72,6 +78,10 @@ class Session:
             self._pool.shutdown(wait=True)
             self._pool = None
             self._pool_size = 0
+        if self._ppool is not None:
+            self._ppool.shutdown(wait=True, cancel_futures=True)
+            self._ppool = None
+            self._ppool_size = 0
 
     def __enter__(self) -> "Session":
         return self
@@ -93,9 +103,20 @@ class Session:
             "pool_workers": self._pool_size,
         }
 
-    def _get_pool(self, workers: int):
+    def _get_pool(self, options: VerifyOptions):
+        """The session pool matching the options' resolved backend."""
+        workers = options.parallel_workers
         if workers <= 1:
             return None
+        if resolve_backend(options) == "process":
+            if self._ppool is None or self._ppool_size < workers:
+                from repro.core.rules.engine import _process_pool
+
+                if self._ppool is not None:
+                    self._ppool.shutdown(wait=True)
+                self._ppool = _process_pool(workers)
+                self._ppool_size = workers
+            return self._ppool
         if self._pool is None or self._pool_size < workers:
             if self._pool is not None:
                 self._pool.shutdown(wait=True)
@@ -178,7 +199,7 @@ class Session:
             output_specs=pair.output_specs,
             options=opts,
             cache=cache,
-            pool=self._get_pool(options.parallel_workers),
+            pool=self._get_pool(options),
             timings=timings,
         )
         rep.cache.trace_cached = cached
@@ -241,6 +262,8 @@ def _merge(arch: str, plan: Plan, results) -> Report:
                 stamp_s=sum(r.timings.stamp_s for r in reps),
                 rules_s=sum(r.timings.rules_s for r in reps),
                 localize_s=sum(r.timings.localize_s for r in reps),
+                profile=RuleProfiler.merge_summaries(
+                    [r.timings.profile for r in reps]),
             ),
             cache=CacheStats(
                 trace_cached=all(r.cache.trace_cached for r in reps),

@@ -1,0 +1,239 @@
+"""Backend parity: ``parallel_workers > 1`` under every ``parallel_backend``
+must reproduce the serial engine exactly — same verdict AND same canonical
+fact set — over every registered campaign scenario kind and fixed-seed
+fuzzed pairs.  Fact sets are compared on *value-canonical* keys (layout
+atoms/perm/groups), never ``Fact.key()``: key layout ids are interned
+process-locally, so keys are meaningless across the process boundary the
+"process" backend ships facts over.
+
+Rides along: unit coverage for the interned columnar store the backends
+lean on (packed ``(node, kind)`` indexes, the shard overlay's
+``(base, kind)`` index, pickle re-interning) and the rule profiler's
+report plumbing.
+"""
+import json
+import pickle
+
+import pytest
+
+from repro.core.bijection import Layout
+from repro.core.relations import DUP, RelStore, Fact
+from repro.core.synth import deep_tp_mlp, fuzz_inject, fuzz_tp_mlp, input_facts_of
+from repro.core.verifier import VerifyOptions, resolve_backend, verify_graphs
+from repro.verify import Plan
+from repro.verify.campaign import SCENARIO_KINDS
+from repro.verify.scenarios import build_pair
+
+BACKENDS = ("thread", "process")
+WORKERS = 4
+
+# one cheap (arch, plan) cell per registered campaign scenario kind
+MATRIX = {
+    "tp-forward": ("qwen3_4b", Plan(tp=4, layers=2, seq=32, batch=2)),
+    "tp-decode": ("qwen3_4b", Plan.decode(tp=4, layers=2)),
+    "sp-forward": ("qwen3_4b", Plan(tp=4, sp=True, layers=2, seq=32, batch=2)),
+    "dp-forward": ("qwen3_4b", Plan(dp=2, layers=2, seq=32)),
+    "dp-grad": ("qwen3_4b", Plan.grad(dp=2, layers=2, seq=8)),
+    "ep-moe-forward": ("mixtral_8x7b", Plan(ep=4, layers=2, seq=32)),
+}
+
+
+def _canon(f: Fact) -> tuple:
+    lay = f.layout
+    lk = None if lay is None else (lay.atoms, lay.perm, lay.dst_groups)
+    return (f.kind, f.base, f.dist, f.size, lk, f.reduce_op, f.dim,
+            f.nchunk, f.index, f.idxset)
+
+
+def _run_captured(pair, options):
+    """verify_graphs + the Propagator it built (for fact-set comparison)."""
+    import repro.core.verifier as V
+
+    captured = []
+    orig = V.Propagator
+
+    class _Capture(orig):
+        def __init__(self, *a, **kw):
+            super().__init__(*a, **kw)
+            captured.append(self)
+
+    V.Propagator = _Capture
+    try:
+        rep = V.verify_graphs(
+            pair.base, pair.dist, size=pair.size,
+            input_facts=pair.input_facts, base_inputs=pair.base_inputs,
+            dist_inputs=pair.dist_inputs,
+            output_specs=getattr(pair, "output_specs", None),
+            options=options)
+    finally:
+        V.Propagator = orig
+    keys = {_canon(f) for facts in captured[0].store.by_dist.values()
+            for f in facts}
+    return rep, keys
+
+
+def _assert_parity(pair, axis="model"):
+    serial_rep, serial_keys = _run_captured(
+        pair, VerifyOptions(axis=axis))
+    for backend in BACKENDS:
+        rep, keys = _run_captured(
+            pair, VerifyOptions(axis=axis, parallel_workers=WORKERS,
+                                parallel_backend=backend))
+        assert rep.verified == serial_rep.verified, backend
+        assert rep.outputs_ok == serial_rep.outputs_ok, backend
+        assert rep.unverified_count == serial_rep.unverified_count, backend
+        extra = keys - serial_keys
+        missing = serial_keys - keys
+        assert not extra and not missing, (
+            f"{backend}: +{len(extra)} extra / -{len(missing)} missing "
+            f"facts vs serial")
+    return serial_rep
+
+
+def test_matrix_covers_every_registered_scenario():
+    assert set(MATRIX) == set(SCENARIO_KINDS)
+
+
+@pytest.mark.parametrize("kind", sorted(MATRIX))
+def test_scenario_backend_parity(kind):
+    arch, plan = MATRIX[kind]
+    scen = plan.scenarios()[0]
+    assert scen.name == kind
+    pair = build_pair(arch, plan, scen)
+    rep = _assert_parity(pair, axis=pair.axis)
+    assert rep.verified, f"{kind}: clean cell must verify"
+
+
+def test_deep_stamped_pair_backend_parity():
+    """16 tagged layers: big enough to clear the process backend's offload
+    floor, so chunk planning + per-node buffered merge actually engage."""
+    pair = deep_tp_mlp(16, size=8, tag_layers=True)
+    pair.size = 8
+    pair.input_facts = input_facts_of(pair)
+    pair.output_specs = None
+    pair.axis = "model"
+    rep = _assert_parity(pair)
+    assert rep.verified
+
+
+@pytest.mark.parametrize("seed", [0, 7, 11])
+def test_fuzz_backend_parity(seed):
+    """Fixed-seed fuzzed pairs, clean and injected: all backends must agree
+    with serial on verdict and fact set (an injected bug detected by one
+    backend but not another would be a soundness hole)."""
+    pair, spec = fuzz_tp_mlp(seed, tag_layers=False)
+    pair.size = spec.size
+    pair.input_facts = input_facts_of(pair)
+    pair.output_specs = None
+    _assert_parity(pair)
+    inj = fuzz_inject(pair, seed)
+    if inj is None:
+        return
+    pair.dist = inj.graph
+    pair.input_facts = input_facts_of(pair)
+    rep = _assert_parity(pair)
+    assert not rep.verified, f"seed {seed}: {inj.name} not detected"
+
+
+# ------------------------------------------------------------ store units
+def test_packed_kind_indexes():
+    store = RelStore()
+    f = Fact(DUP, 3, 5, 4, Layout.identity((8,)))
+    assert store.add(f)
+    assert not store.add(Fact(DUP, 3, 5, 4, Layout.identity((8,))))  # dedup
+    assert store.facts(5) == [f]
+    assert store.facts_kind(5, "dup") == [f]
+    assert store.facts_kind(5, "shard") == []
+    assert store.facts_for_base_kind(3, "dup") == [f]
+    assert store.facts_for_base_kind(3, "partial") == []
+
+
+def test_shard_overlay_base_kind_index():
+    committed = RelStore()
+    f1 = Fact(DUP, 1, 2, 4, Layout.identity((8,)))
+    committed.add(f1)
+    from repro.core.rules.engine import _ShardStore
+
+    sh = _ShardStore(committed)
+    f2 = Fact(DUP, 1, 3, 4, Layout.identity((8,)))
+    assert sh.add(f2)
+    assert not sh.add(f1)  # committed facts stay deduped through the overlay
+    assert set(sh.facts_for_base_kind(1, "dup")) == {f1, f2}
+    assert sh.facts_for_base_kind(1, "shard") == []
+    # the overlay never writes through
+    assert committed.facts_for_base_kind(1, "dup") == [f1]
+
+
+def test_fact_pickle_reintern_roundtrip():
+    """Facts cross the process boundary: the unpickled twin must re-intern
+    its layout and dedup against the locally-derived original."""
+    f = Fact("shard", 1, 2, 4, Layout.identity((4, 8)))
+    f.key()  # populate the process-local key cache pre-pickle
+    g = pickle.loads(pickle.dumps(f, protocol=pickle.HIGHEST_PROTOCOL))
+    assert g.key() == f.key()
+    assert _canon(g) == _canon(f)
+    store = RelStore()
+    assert store.add(f)
+    assert not store.add(g)
+
+
+# ------------------------------------------------------------ options/profiler
+def test_resolve_backend():
+    opt = lambda **kw: VerifyOptions(**kw)
+    assert resolve_backend(opt(parallel_workers=4,
+                               parallel_backend="thread")) == "thread"
+    assert resolve_backend(opt(parallel_workers=4,
+                               parallel_backend="process")) == "process"
+    import os
+
+    from repro.core.rules.engine import fork_available
+
+    want = ("process" if fork_available() and (os.cpu_count() or 1) > 1
+            else "thread")
+    assert resolve_backend(opt(parallel_workers=4)) == want  # auto
+    assert resolve_backend(opt()) == "thread"  # serial auto stays thread
+    with pytest.raises(ValueError):
+        resolve_backend(opt(parallel_backend="gpu"))
+
+
+def test_profile_lands_in_report_json():
+    pair = deep_tp_mlp(4, size=8, tag_layers=False)
+    kw = dict(size=8, input_facts=input_facts_of(pair),
+              base_inputs=pair.base_inputs, dist_inputs=pair.dist_inputs)
+    rep = verify_graphs(pair.base, pair.dist,
+                        options=VerifyOptions(profile=True), **kw)
+    prof = rep.timings.profile
+    assert prof and prof["rules"] and prof["op_families"]
+    assert all(row["count"] > 0 and row["time_s"] >= 0.0
+               for row in prof["rules"].values())
+    d = json.loads(rep.to_json())
+    assert d["timings"]["profile"]["rules"] == prof["rules"]
+    # off by default: the per-invocation clock reads must not ride along
+    rep_off = verify_graphs(pair.base, pair.dist, options=VerifyOptions(),
+                            **kw)
+    assert rep_off.timings.profile is None
+
+
+def test_profiler_merge_summaries():
+    from repro.core.report import RuleProfiler
+
+    a = {"rules": {"r": {"time_s": 1.0, "count": 2}},
+         "op_families": {"elementwise": {"time_s": 0.5, "count": 3}}}
+    b = {"rules": {"r": {"time_s": 0.25, "count": 1},
+                   "s": {"time_s": 0.125, "count": 4}},
+         "op_families": {}}
+    m = RuleProfiler.merge_summaries([a, None, b])
+    assert m["rules"]["r"] == {"time_s": 1.25, "count": 3}
+    assert m["rules"]["s"] == {"time_s": 0.125, "count": 4}
+    assert m["op_families"]["elementwise"]["count"] == 3
+    assert RuleProfiler.merge_summaries([None, {}]) is None
+
+
+def test_cli_backend_and_profile_flags():
+    from repro.verify.cli import build_parser
+
+    args = build_parser().parse_args(
+        ["qwen3_4b", "--tp", "4", "--workers", "2",
+         "--backend", "process", "--profile"])
+    assert args.backend == "process" and args.profile
+    assert build_parser().parse_args(["qwen3_4b", "--tp", "4"]).backend == "auto"
