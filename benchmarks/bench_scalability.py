@@ -40,13 +40,13 @@ def run() -> list[dict]:
                     "derived": "expect~constant"})
     # (c) layers: stamped (default pipeline) vs full-trace reference.
     # best-of-2 — the CI ratio guard reads these rows, so damp timer noise
-    for l in (4, 8, 16, 32):
-        out.append({"name": f"fig11c_layers_{l}",
-                    "us_per_call": _time(layers=l, reps=2) * 1e6,
+    for nl in (4, 8, 16, 32):
+        out.append({"name": f"fig11c_layers_{nl}",
+                    "us_per_call": _time(layers=nl, reps=2) * 1e6,
                     "derived": "expect~flat(stamped)"})
-    for l in (4, 32):
-        out.append({"name": f"fig11c_layers_{l}_nostamp",
-                    "us_per_call": _time(layers=l, stamp=False, reps=2) * 1e6,
+    for nl in (4, 32):
+        out.append({"name": f"fig11c_layers_{nl}_nostamp",
+                    "us_per_call": _time(layers=nl, stamp=False, reps=2) * 1e6,
                     "derived": "expect~linear(reference)"})
     # (d) tp degree
     for tp in (4, 8, 16):

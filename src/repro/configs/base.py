@@ -11,7 +11,7 @@ with per-arch skips (encoder-only -> no decode; full-attention -> no 500k).
 from __future__ import annotations
 
 import importlib
-from dataclasses import dataclass, field, replace
+from dataclasses import dataclass
 from typing import Optional
 
 import jax
@@ -105,15 +105,15 @@ class ArchConfig:
     def d_inner_p(self) -> int:
         return self.ssm_heads_p * self.ssm_head_dim
 
-    def is_attn_layer(self, l: int) -> bool:
+    def is_attn_layer(self, layer: int) -> bool:
         if self.ssm_state == 0:
             return True
         if self.attn_period == 0:
             return False  # pure SSM
-        return l % self.attn_period == self.attn_offset
+        return layer % self.attn_period == self.attn_offset
 
-    def is_moe_layer(self, l: int) -> bool:
-        return self.n_experts > 0 and l % self.moe_period == self.moe_offset
+    def is_moe_layer(self, layer: int) -> bool:
+        return self.n_experts > 0 and layer % self.moe_period == self.moe_offset
 
     @property
     def block_period(self) -> int:
@@ -133,8 +133,8 @@ class ArchConfig:
         n = self.vocab * self.d_model  # embed
         if not self.tie_embeddings:
             n += self.vocab * self.d_model
-        for l in range(self.n_layers):
-            if self.is_attn_layer(l):
+        for li in range(self.n_layers):
+            if self.is_attn_layer(li):
                 n += self.d_model * (self.n_heads * hd) + self.d_model * (
                     2 * self.n_kv_heads * hd
                 )
@@ -143,7 +143,7 @@ class ArchConfig:
                 di = self.d_inner
                 n += self.d_model * (2 * di + 2 * self.ssm_state + self.ssm_heads)
                 n += di * self.d_model + self.ssm_conv * (di + 2 * self.ssm_state)
-            if self.is_moe_layer(l):
+            if self.is_moe_layer(li):
                 n += self.d_model * self.n_experts  # router
                 n += self.n_experts * 3 * self.d_model * self.d_ff_expert
                 if self.shared_expert_ff:
@@ -159,7 +159,7 @@ class ArchConfig:
         if self.n_experts == 0:
             return self.param_count()
         full = self.param_count()
-        moe_layers = sum(1 for l in range(self.n_layers) if self.is_moe_layer(l))
+        moe_layers = sum(1 for li in range(self.n_layers) if self.is_moe_layer(li))
         all_exp = moe_layers * self.n_experts * 3 * self.d_model * self.d_ff_expert
         act_exp = moe_layers * self.top_k * 3 * self.d_model * self.d_ff_expert
         return full - all_exp + act_exp

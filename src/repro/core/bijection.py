@@ -328,11 +328,11 @@ class Layout:
         except NotSplitMerge:
             return False
 
-        def sig(l: Layout):
-            nonunit = [i for i in range(len(l.atoms)) if l.atoms[i] != 1]
+        def sig(lay: Layout):
+            nonunit = [i for i in range(len(lay.atoms)) if lay.atoms[i] != 1]
             rank = {idx: j for j, idx in enumerate(nonunit)}
-            atoms = tuple(l.atoms[i] for i in nonunit)
-            perm = tuple(rank[p] for p in l.perm if p in rank)
+            atoms = tuple(lay.atoms[i] for i in nonunit)
+            perm = tuple(rank[p] for p in lay.perm if p in rank)
             return atoms, perm
 
         return sig(a) == sig(b)

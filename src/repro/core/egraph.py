@@ -18,7 +18,7 @@ egglog layers Datalog over e-graphs.  The e-graph's job here is:
 """
 from __future__ import annotations
 
-from typing import Any, Callable, Iterable, Optional
+from typing import Callable, Iterable, Optional
 
 from .ir import COMMUTATIVE, Graph, Node
 

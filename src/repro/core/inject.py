@@ -22,7 +22,6 @@ graph surgery into a fresh :class:`Graph` (the contract
 """
 from __future__ import annotations
 
-import dataclasses
 from dataclasses import dataclass
 from typing import Callable, Optional
 
@@ -245,6 +244,31 @@ def wrong_replica_groups(g: Graph, index: int = 0) -> Optional[Injection]:
         f"wrong_replica_groups@{index}",
         f"all_reduce at {tgt.src} reduced over half-groups only",
         "wrong_replica_groups",
+        _surgery(g, edit),
+        tgt.src,
+    )
+
+
+@DEFAULT_INJECTORS.injector(
+    "wrong_collective_axis", category="wrong_mesh_axis",
+    site_op="all_reduce",
+    doc="all_reduce over a mesh axis the program's mesh never declared")
+def wrong_collective_axis(g: Graph, index: int = 0) -> Optional[Injection]:
+    tgt = _find(g, "all_reduce", index=index)
+    if tgt is None:
+        return None
+
+    def edit(ng: Graph, n: Node, remap):
+        if n.id == tgt.id:
+            return ng.add(n.op, [remap[i] for i in n.inputs], n.shape, n.dtype,
+                          _remap_params(n.params, axes=("pipeline",)),
+                          src=n.src, layer=n.layer, scope=n.scope)
+        return None
+
+    return Injection(
+        f"wrong_collective_axis@{index}",
+        f"all_reduce at {tgt.src} reduces over undeclared axis 'pipeline'",
+        "wrong_mesh_axis",
         _surgery(g, edit),
         tgt.src,
     )

@@ -31,8 +31,7 @@ Op vocabulary (the verifier's rules are polymorphic over most of it):
 """
 from __future__ import annotations
 
-import dataclasses
-from dataclasses import dataclass, field
+from dataclasses import dataclass
 from typing import Any, Iterable, Iterator, Optional, Sequence
 
 # ---------------------------------------------------------------------------
@@ -171,6 +170,18 @@ class Graph:
     def consumers(self, nid: int) -> list[int]:
         return self.consumer_index().get(nid, [])
 
+    def dead_ids(self) -> set[int]:
+        """Node ids with no consumers that are not graph outputs.
+
+        Tracing legitimately leaves some (jax keeps unused jaxpr invars,
+        and surgery can strand a replaced node); the static analysis tier
+        walks this set to flag the subset that still costs something at
+        runtime — e.g. a dead collective's communication."""
+        cons = self.consumer_index()
+        outs = set(self.outputs)
+        return {n.id for n in self.nodes
+                if n.id not in outs and not cons.get(n.id)}
+
     def toposort(self, roots: Optional[Iterable[int]] = None) -> list[int]:
         """Node ids in topological order (ids are already topological since
         the graph is append-only SSA, but subsets need filtering)."""
@@ -228,7 +239,7 @@ class Graph:
                 st = n.param("start_indices")
                 li = n.param("limit_indices")
                 if st is not None and li is not None:
-                    extents = tuple(l - s for s, l in zip(st, li))
+                    extents = tuple(lim - s for s, lim in zip(st, li))
                     params = (("extents", extents), ("strides", n.param("strides")))
             sig.append((n.op, tuple(ins), n.shape, n.dtype, params))
         return hash(tuple(sig))

@@ -18,6 +18,19 @@ from typing import Optional
 
 from .verifier import Report, VerifyOptions
 
+# names that already warned — each deprecated entry point emits exactly
+# once per process (tests reset this set directly).  Removal timeline:
+# docs/API.md.
+_warned: set = set()
+
+
+def _warn(old: str, new: str) -> None:
+    if old in _warned:
+        return
+    _warned.add(old)
+    warnings.warn(f"{old} is deprecated; use {new}",
+                  DeprecationWarning, stacklevel=3)
+
 
 def _session(options):
     from repro.verify import Session
@@ -62,9 +75,7 @@ def verify_model_tp(
     mutate_dist=None,
 ) -> Report:
     """Deprecated: use ``Session().verify(arch, Plan(tp=...))``."""
-    warnings.warn(
-        "verify_model_tp is deprecated; use repro.verify.Session with "
-        "Plan(tp=...)", DeprecationWarning, stacklevel=2)
+    _warn("verify_model_tp", "repro.verify.Session with Plan(tp=...)")
     if tp <= 1:
         return _tp1_report(arch, decode=False, smoke=smoke, batch=batch,
                            dim2=seq, n_layers=n_layers, options=options,
@@ -91,9 +102,7 @@ def verify_decode_tp(
     mutate_dist=None,
 ) -> Report:
     """Deprecated: use ``Session().verify(arch, Plan.decode(tp=...))``."""
-    warnings.warn(
-        "verify_decode_tp is deprecated; use repro.verify.Session with "
-        "Plan.decode(tp=...)", DeprecationWarning, stacklevel=2)
+    _warn("verify_decode_tp", "repro.verify.Session with Plan.decode(tp=...)")
     if tp <= 1:
         return _tp1_report(arch, decode=True, smoke=smoke, batch=batch,
                            dim2=max_len, n_layers=n_layers, options=options,

@@ -43,6 +43,12 @@ LOOPRED = "loopred"
 # one int instead of hashing a (int, str) tuple on every store read/write
 KINDS = (DUP, SHARD, PARTIAL, SLICEGRP, LOOPRED)
 KIND_ID = {k: i for i, k in enumerate(KINDS)}
+
+# exported constant name -> kind string ("DUP" -> "dup"): the vocabulary the
+# registry static checker (repro.analysis.rulecheck) resolves when scanning
+# rule-module sources for Fact constructions and kind reads
+KIND_CONSTANTS = {"DUP": DUP, "SHARD": SHARD, "PARTIAL": PARTIAL,
+                  "SLICEGRP": SLICEGRP, "LOOPRED": LOOPRED}
 _KIND_BITS = 3  # 2**3 >= len(KINDS); key = (node_id << 3) | kind_id
 
 # layouts interned to small ints for fact keys.  The interning key is

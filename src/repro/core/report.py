@@ -28,8 +28,12 @@ SEVERITY = {
     "redundant_all_reduce": "high",
     "wrong_replica_groups": "high",
     "wrong_axis_split": "high",
+    "wrong_mesh_axis": "high",
     "layout_mismatch": "high",
     "precision_mismatch": "medium",
+    "redundant_all_gather": "medium",
+    "dead_collective": "medium",
+    "ir_invalid": "high",
     "unverified_frontier": "low",
 }
 _SEVERITY_ORDER = {"high": 0, "medium": 1, "low": 2}
@@ -226,6 +230,10 @@ class Report:
     # per-scenario sub-results for multi-axis plans: list of dicts with
     # {"scenario", "axis", "size", "verified", "num_facts", ...}
     scenarios: list = field(default_factory=list)
+    # lint-preflight result (LintReport.to_dict() from repro.analysis) when
+    # Session.verify(..., lint=True) ran the static tier first; kept as a
+    # plain dict so core stays import-independent of the analysis package
+    lint: Optional[dict] = None
 
     def summary(self) -> str:
         head = f"{'VERIFIED' if self.verified else 'UNVERIFIED'}"
@@ -247,6 +255,12 @@ class Report:
             lines.append(
                 f"  cache: trace={'warm' if self.cache.trace_cached else 'cold'} "
                 f"fp_cached={self.cache.fp_cached}"
+            )
+        if self.lint is not None:
+            lines.append(
+                f"  lint: {'ok' if self.lint.get('ok') else 'FAILED'} "
+                f"({self.lint.get('errors', 0)} errors, "
+                f"{self.lint.get('warnings', 0)} warnings)"
             )
         for s in self.scenarios:
             lines.append(
@@ -280,6 +294,7 @@ class Report:
             "timings": asdict(self.timings),
             "cache": asdict(self.cache),
             "scenarios": list(self.scenarios),
+            "lint": self.lint,
             "bug_sites": [asdict(b) for b in self.bug_sites],
             "diagnostics": [
                 {"dist": g.dist, "category": g.category, "detail": g.detail,
@@ -314,6 +329,7 @@ class Report:
             timings=PhaseTimings(**d.get("timings", {})),
             cache=CacheStats(**d.get("cache", {})),
             scenarios=list(d.get("scenarios", [])),
+            lint=d.get("lint"),
         )
 
 

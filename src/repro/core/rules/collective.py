@@ -39,7 +39,7 @@ def _touched_dims(d: Node) -> tuple:
 
 @R.rule("orthogonal_collective",
         ("all_reduce", "all_gather", "reduce_scatter", "all_to_all"),
-        consumes=(DUP, SHARD, PARTIAL))
+        consumes=(DUP, SHARD, PARTIAL), produces=(DUP, SHARD, PARTIAL))
 def orthogonal_collective(prop, d: Node) -> None:
     """Collective over a *different* mesh axis than the one being verified
     (composite tp x dp plans verify the data axis of a 2D program whose
@@ -90,7 +90,7 @@ def orthogonal_collective(prop, d: Node) -> None:
                 prop.emit(Fact(SHARD, z.id, d.id, prop.size, lay))
 
 
-@R.rule("axis_index_congruence", ("axis_index",))
+@R.rule("axis_index_congruence", ("axis_index",), produces=(DUP,))
 def axis_index_congruence(prop, d: Node) -> None:
     """axis_index over a *different* axis than the one verified is the same
     value at every rank of the verified axis — congruent-dup with the
@@ -112,7 +112,8 @@ def axis_index_congruence(prop, d: Node) -> None:
             prop.emit(Fact(DUP, zid, d.id, prop.size, Layout.identity(z.shape)))
 
 
-@R.rule("all_reduce", ("all_reduce",), consumes=(PARTIAL, DUP, LOOPRED))
+@R.rule("all_reduce", ("all_reduce",), consumes=(PARTIAL, DUP, LOOPRED),
+        produces=(DUP,))
 def all_reduce(prop, d: Node) -> None:
     op = d.param("reduce_op", "add")
     if not _axis_match(prop, d):
@@ -144,7 +145,8 @@ def all_reduce(prop, d: Node) -> None:
                     prop.emit(Fact(DUP, z.id, d.id, prop.size, Layout.identity(z.shape)))
 
 
-@R.rule("all_gather", ("all_gather",), consumes=(SHARD, DUP))
+@R.rule("all_gather", ("all_gather",), consumes=(SHARD, DUP),
+        produces=(DUP,))
 def all_gather(prop, d: Node) -> None:
     if not _axis_match(prop, d):
         return
@@ -176,7 +178,8 @@ def all_gather(prop, d: Node) -> None:
         prop.emit(Fact(DUP, f.base, d.id, prop.size, new_lay))
 
 
-@R.rule("reduce_scatter", ("reduce_scatter",), consumes=(PARTIAL,))
+@R.rule("reduce_scatter", ("reduce_scatter",), consumes=(PARTIAL,),
+        produces=(SHARD,))
 def reduce_scatter(prop, d: Node) -> None:
     if not _axis_match(prop, d):
         return
@@ -197,7 +200,8 @@ def reduce_scatter(prop, d: Node) -> None:
         prop.emit(Fact(SHARD, f.base, d.id, prop.size, new_lay))
 
 
-@R.rule("all_to_all", ("all_to_all",), consumes=(SHARD,))
+@R.rule("all_to_all", ("all_to_all",), consumes=(SHARD,),
+        produces=(SHARD,))
 def all_to_all(prop, d: Node) -> None:
     if not _axis_match(prop, d):
         return
@@ -253,8 +257,8 @@ def loopred_base_target(prop, base_tensor: int, dim: int, total_chunks: int) -> 
             if start is None:
                 continue
             full = all(
-                (s == 0 and l == tshape[k]) or k == dim
-                for k, (s, l) in enumerate(zip(start, limit))
+                (s == 0 and lim == tshape[k]) or k == dim
+                for k, (s, lim) in enumerate(zip(start, limit))
             )
             if full and limit[dim] - start[dim] == chunk and start[dim] % chunk == 0:
                 cover[nid] = frozenset([start[dim] // chunk])

@@ -24,8 +24,9 @@ GENERIC_EXTRA_OPS = (
 R.noop("input", "param", "axis_index", "ppermute")
 
 
-@R.fallback("generic_congruence", consumes=(DUP,))
-@R.rule("generic_congruence", GENERIC_EXTRA_OPS, consumes=(DUP,))
+@R.fallback("generic_congruence", consumes=(DUP,), produces=(DUP,))
+@R.rule("generic_congruence", GENERIC_EXTRA_OPS, consumes=(DUP,),
+        produces=(DUP,))
 def generic(prop, d: Node) -> None:
     """All inputs dup with (effectively) identity layout -> congruent
     baseline node is a duplicate."""
@@ -47,7 +48,7 @@ def generic(prop, d: Node) -> None:
                 prop.emit(Fact(DUP, z.id, d.id, prop.size, Layout.identity(z.shape)))
 
 
-@R.rule("const_congruence", ("const",))
+@R.rule("const_congruence", ("const",), produces=(DUP,))
 def const(prop, d: Node) -> None:
     # constants with identical payload hash in both graphs: congruent leaf
     val = d.param("value_hash")
@@ -61,7 +62,7 @@ def const(prop, d: Node) -> None:
             break  # congruent consts share an eclass: one pairing suffices
 
 
-@R.rule("iota_congruence", ("iota",))
+@R.rule("iota_congruence", ("iota",), produces=(DUP,))
 def iota(prop, d: Node) -> None:
     """iota is a pure function of (shape, dtype, params): congruent iotas
     in both graphs are duplicates (layer-filtered: cross-layer pairings

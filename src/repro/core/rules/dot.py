@@ -18,7 +18,8 @@ def _dnums(d: Node):
     return tuple(lc), tuple(rc), tuple(lb), tuple(rb)
 
 
-@R.rule("dot", ("dot",), consumes=(DUP, SHARD, PARTIAL))
+@R.rule("dot", ("dot",), consumes=(DUP, SHARD, PARTIAL),
+        produces=(DUP, SHARD, PARTIAL))
 def dot(prop, d: Node) -> None:
     fx = prop.store.facts(d.inputs[0])
     fy = prop.store.facts(d.inputs[1])

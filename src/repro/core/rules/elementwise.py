@@ -16,7 +16,8 @@ from .registry import DEFAULT_REGISTRY as R
 ALL_KINDS = (DUP, SHARD, PARTIAL, SLICEGRP, LOOPRED)
 
 
-@R.rule("elementwise", ELEMENTWISE, consumes=ALL_KINDS)
+@R.rule("elementwise", ELEMENTWISE, consumes=ALL_KINDS,
+        produces=ALL_KINDS)
 def elementwise(prop, d: Node) -> None:
     n = len(d.inputs)
     if n == 1:

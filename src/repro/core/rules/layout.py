@@ -13,7 +13,8 @@ from .registry import DEFAULT_REGISTRY as R
 
 
 @R.rule("layout_compose", ("reshape", "transpose"),
-        consumes=(DUP, SHARD, PARTIAL, SLICEGRP))
+        consumes=(DUP, SHARD, PARTIAL, SLICEGRP),
+        produces=(DUP, SHARD, PARTIAL, SLICEGRP))
 def layout_op(prop, d: Node) -> None:
     x = d.inputs[0]
     for f in prop.store.facts(x):
@@ -40,7 +41,8 @@ def layout_op(prop, d: Node) -> None:
 
 
 @R.rule("convert", ("convert",),
-        consumes=(DUP, SHARD, PARTIAL, SLICEGRP, LOOPRED))
+        consumes=(DUP, SHARD, PARTIAL, SLICEGRP, LOOPRED),
+        produces=(DUP, SHARD, PARTIAL, SLICEGRP, LOOPRED))
 def convert(prop, d: Node) -> None:
     x = d.inputs[0]
     for f in prop.store.facts(x):
@@ -58,7 +60,8 @@ def convert(prop, d: Node) -> None:
             )
 
 
-@R.rule("broadcast", ("broadcast",), consumes=(DUP, SHARD, PARTIAL))
+@R.rule("broadcast", ("broadcast",), consumes=(DUP, SHARD, PARTIAL),
+        produces=(DUP, SHARD, PARTIAL))
 def broadcast(prop, d: Node) -> None:
     x = d.inputs[0]
     bd = d.param("broadcast_dimensions") or ()
@@ -114,7 +117,8 @@ def broadcast(prop, d: Node) -> None:
 
 
 @R.rule("pad_shard", ("pad",),
-        consumes=(DUP, SHARD, PARTIAL, SLICEGRP, LOOPRED))
+        consumes=(DUP, SHARD, PARTIAL, SLICEGRP, LOOPRED),
+        produces=(SHARD, PARTIAL))
 def pad(prop, d: Node) -> None:
     """pad: dup via congruence (the generic rule); shard preserved when the
     sharded dim is not padded (same padding config on the baseline
@@ -153,7 +157,8 @@ def pad(prop, d: Node) -> None:
                 prop.emit(Fact(SHARD, z.id, d.id, prop.size, lay))
 
 
-@R.rule("axis_op_shard", ("cumsum", "rev"), consumes=(SHARD,))
+@R.rule("axis_op_shard", ("cumsum", "rev"), consumes=(SHARD,),
+        produces=(SHARD,))
 def axis_op(prop, d: Node) -> None:
     """Ops acting along one axis (cumsum/rev): dup facts propagate via the
     generic congruence rule; shard facts carry through when the op axis is

@@ -12,7 +12,8 @@ from .registry import DEFAULT_REGISTRY as R
 REDUCE_OPS = ("reduce_sum", "reduce_max", "reduce_min", "reduce_prod")
 
 
-@R.rule("reduce", REDUCE_OPS, consumes=(DUP, SHARD, PARTIAL))
+@R.rule("reduce", REDUCE_OPS, consumes=(DUP, SHARD, PARTIAL),
+        produces=(DUP, SHARD, PARTIAL))
 def reduce_rule(prop, d: Node) -> None:
     axes = tuple(d.param("axes") or ())
     red = {"reduce_sum": "add", "reduce_max": "max", "reduce_min": "min"}.get(d.op)

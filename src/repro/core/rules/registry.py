@@ -9,7 +9,12 @@ Each rule is a plain function ``fn(prop, node)`` over the
 * ``consumes`` — the fact kinds it reads from the node's *inputs*.  The
   semi-naive worklist engine uses this to skip re-firing a rule when the
   newly-derived facts on a node's inputs are of kinds the rule never reads
-  (an empty ``consumes`` means "fire on any change").
+  (an empty ``consumes`` means "fire on any change"), and
+* ``produces`` — the fact kinds the rule can emit.  Purely declarative
+  metadata (the engine never reads it): ``repro.analysis.rulecheck`` builds
+  the producer/consumer matrix from it to flag dead rules and orphan kinds
+  statically, and cross-checks the declarations against the family-module
+  sources.
 
 Several rules may share an op; they fire in registration order (e.g. the
 generic congruence rule runs before the op-specific shard rule on ``pad``).
@@ -17,7 +22,7 @@ generic congruence rule runs before the op-specific shard rule on ``pad``).
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable, Iterable, Optional, Sequence
+from typing import Callable, Iterable, Sequence
 
 
 @dataclass(frozen=True)
@@ -26,6 +31,7 @@ class Rule:
     ops: frozenset
     consumes: frozenset
     fn: Callable
+    produces: frozenset = frozenset()
 
 
 class RuleRegistry:
@@ -35,11 +41,13 @@ class RuleRegistry:
         self._fallback: list[Rule] = []
 
     # -- registration (decorators) -----------------------------------------
-    def rule(self, name: str, ops: Iterable[str], consumes: Iterable[str] = ()):
+    def rule(self, name: str, ops: Iterable[str], consumes: Iterable[str] = (),
+             produces: Iterable[str] = ()):
         """Register ``fn(prop, node)`` for the given dist-graph ops."""
 
         def deco(fn: Callable) -> Callable:
-            r = Rule(name, frozenset(ops), frozenset(consumes), fn)
+            r = Rule(name, frozenset(ops), frozenset(consumes), fn,
+                     frozenset(produces))
             self.rules.append(r)
             for op in r.ops:
                 self._by_op.setdefault(op, []).append(r)
@@ -47,12 +55,14 @@ class RuleRegistry:
 
         return deco
 
-    def fallback(self, name: str, consumes: Iterable[str] = ()):
+    def fallback(self, name: str, consumes: Iterable[str] = (),
+                 produces: Iterable[str] = ()):
         """Register the rule fired for ops with no explicit registration
         (sound default: opaque ops verify only by congruence)."""
 
         def deco(fn: Callable) -> Callable:
-            r = Rule(name, frozenset(), frozenset(consumes), fn)
+            r = Rule(name, frozenset(), frozenset(consumes), fn,
+                     frozenset(produces))
             self.rules.append(r)
             self._fallback.append(r)
             return fn
@@ -77,7 +87,9 @@ class RuleRegistry:
         for r in self.rules:
             ops = ",".join(sorted(r.ops)) or "<fallback>"
             kinds = ",".join(sorted(r.consumes)) or "*"
-            lines.append(f"{r.name}: ops=[{ops}] consumes=[{kinds}]")
+            prod = ",".join(sorted(r.produces)) or "-"
+            lines.append(f"{r.name}: ops=[{ops}] consumes=[{kinds}] "
+                         f"produces=[{prod}]")
         return "\n".join(lines)
 
 

@@ -16,7 +16,8 @@ from .congruence import generic
 from .registry import DEFAULT_REGISTRY as R
 
 
-@R.rule("slice", ("slice",), consumes=(DUP, SHARD, PARTIAL))
+@R.rule("slice", ("slice",), consumes=(DUP, SHARD, PARTIAL),
+        produces=(DUP, SHARD, PARTIAL, SLICEGRP))
 def slice_rule(prop, d: Node) -> None:
     start = d.param("start_indices")
     limit = d.param("limit_indices")
@@ -83,7 +84,7 @@ def _slicegrp_from_slice(prop, d: Node, f: Fact, start, limit, xshape) -> None:
     # slice must be full on all dims except the local image of k (== k for
     # clean layouts) and chunk-aligned there
     sliced_dims = [
-        i for i, (s, l) in enumerate(zip(start, limit)) if not (s == 0 and l == xshape[i])
+        i for i, (s, lim) in enumerate(zip(start, limit)) if not (s == 0 and lim == xshape[i])
     ]
     if sliced_dims != [k]:
         return
@@ -105,7 +106,8 @@ def _slicegrp_from_slice(prop, d: Node, f: Fact, start, limit, xshape) -> None:
     )
 
 
-@R.rule("concat_shard", ("concat",), consumes=(SHARD,))
+@R.rule("concat_shard", ("concat",), consumes=(SHARD,),
+        produces=(SHARD,))
 def concat(prop, d: Node) -> None:
     """concat: dup operands verify via the generic congruence rule; shard
     operands concat along a non-sharded dim keep the shard relation."""
@@ -129,7 +131,8 @@ def concat(prop, d: Node) -> None:
 
 
 @R.rule("dynamic_slice_shard", ("dynamic_slice", "dynamic_update_slice"),
-        consumes=(DUP, SHARD, PARTIAL, SLICEGRP, LOOPRED))
+        consumes=(DUP, SHARD, PARTIAL, SLICEGRP, LOOPRED),
+        produces=(SHARD,))
 def dynamic_sliceish(prop, d: Node) -> None:
     """dynamic_slice / dynamic_update_slice (KV-cache reads/writes):
     dup via congruence (the generic rule); clean shard facts carry through
@@ -231,7 +234,8 @@ def _rank_scaled_chunk(prop, nid: int) -> Optional[int]:
     return None
 
 
-@R.rule("rank_dynamic_slice", ("dynamic_slice",), consumes=(DUP,))
+@R.rule("rank_dynamic_slice", ("dynamic_slice",), consumes=(DUP,),
+        produces=(SHARD,))
 def rank_dynamic_slice(prop, d: Node) -> None:
     """``dynamic_slice(x', starts...)`` taking this rank's contiguous chunk
     of a replicated tensor: exactly one start is ``axis_index * chunk`` with
@@ -286,7 +290,8 @@ def _gather_dims(dn: str, name: str) -> tuple:
     return tuple(int(x) for x in m.group(1).replace(" ", "").split(",") if x)
 
 
-@R.rule("gather_batch", ("gather",), consumes=(DUP, SHARD))
+@R.rule("gather_batch", ("gather",), consumes=(DUP, SHARD),
+        produces=(SHARD,))
 def gather_batch(prop, d: Node) -> None:
     """gather with a replicated operand and a *batch* dim of the indices
     sharded: each rank looks up its own rows of the same table, so the shard
@@ -323,7 +328,8 @@ def gather_batch(prop, d: Node) -> None:
                 prop.emit(Fact(SHARD, z.id, d.id, prop.size, lay))
 
 
-@R.rule("scatter_add_partial", ("scatter_add",), consumes=(DUP, SHARD))
+@R.rule("scatter_add_partial", ("scatter_add",), consumes=(DUP, SHARD),
+        produces=(PARTIAL,))
 def scatter_add_partial(prop, d: Node) -> None:
     """scatter-add onto an all-zero operand with the scatter batch dim of
     the indices and updates sharded: each rank accumulates its own rows onto

@@ -54,13 +54,13 @@ def deep_tp_mlp(
     x = gb.add("input", (), (B, H), "float32")
     pair = SynthPair(gb, Graph("dist"))
     pair.base_inputs.append(x)
-    for l in range(n_layers):
-        tag = l if tag_layers else None
+    for li in range(n_layers):
+        tag = li if tag_layers else None
         w1 = gb.add("param", (), (H, F), "float32", layer=tag)
         w2 = gb.add("param", (), (F, H), "float32", layer=tag)
         pair.base_inputs += [w1, w2]
         h = gb.add("dot", [x, w1], (B, F), "float32", dn, layer=tag,
-                   src=f"mlp.py:{10 + l}")
+                   src=f"mlp.py:{10 + li}")
         t = gb.add("tanh", [h], (B, F), "float32", layer=tag)
         y = gb.add("dot", [t, w2], (B, H), "float32", dn, layer=tag)
         x = gb.add("add", [x, y], (B, H), "float32", layer=tag)
@@ -70,20 +70,20 @@ def deep_tp_mlp(
     xd = gd.add("input", (), (B, H), "float32")
     pair.dist_inputs.append(xd)
     pair.input_relations.append(("dup", 0, 0, -1))
-    for l in range(n_layers):
-        tag = l if tag_layers else None
+    for li in range(n_layers):
+        tag = li if tag_layers else None
         w1d = gd.add("param", (), (H, F // c), "float32", layer=tag)
         w2d = gd.add("param", (), (F // c, H), "float32", layer=tag)
         i1 = len(pair.dist_inputs)
         pair.dist_inputs += [w1d, w2d]
         pair.input_relations += [("shard", i1, i1, 1), ("shard", i1 + 1, i1 + 1, 0)]
         hd = gd.add("dot", [xd, w1d], (B, F // c), "float32", dn, layer=tag,
-                    src=f"mlp.py:{10 + l}")
+                    src=f"mlp.py:{10 + li}")
         td = gd.add("tanh", [hd], (B, F // c), "float32", layer=tag)
         yd = gd.add("dot", [td, w2d], (B, H), "float32", dn, layer=tag)
         ar = gd.add("all_reduce", [yd], (B, H), "float32",
                     {"reduce_op": "add", "axes": ("model",)}, layer=tag,
-                    src=f"mlp.py:{100 + l}")
+                    src=f"mlp.py:{100 + li}")
         xd = gd.add("add", [xd, ar], (B, H), "float32", layer=tag)
     gd.mark_output(xd)
     return pair
@@ -186,18 +186,18 @@ def fuzz_tp_mlp(seed: int, tag_layers: bool = True
     x = gb.add("input", (), (B, H), "float32")
     pair = SynthPair(gb, Graph(f"fuzz{seed}-dist"))
     pair.base_inputs.append(x)
-    for l in range(n_layers):
-        tag = l if tag_layers else None
+    for li in range(n_layers):
+        tag = li if tag_layers else None
         w1 = gb.add("param", (), (H, F), "float32", layer=tag)
         w2 = gb.add("param", (), (F, H), "float32", layer=tag)
         pair.base_inputs += [w1, w2]
-        if chains[l] == "shared":
-            x = _shared_chain(gb, x, B, H, tag, f"fuzz{seed}.py:{40 + l}")
+        if chains[li] == "shared":
+            x = _shared_chain(gb, x, B, H, tag, f"fuzz{seed}.py:{40 + li}")
         h = gb.add("dot", [x, w1], (B, F), "float32", dn, layer=tag,
-                   src=f"fuzz{seed}.py:{10 + l}")
-        t = gb.add(acts[l], [h], (B, F), "float32", layer=tag)
+                   src=f"fuzz{seed}.py:{10 + li}")
+        t = gb.add(acts[li], [h], (B, F), "float32", layer=tag)
         y = gb.add("dot", [t, w2], (B, H), "float32", dn, layer=tag,
-                   src=f"fuzz{seed}.py:{20 + l}")
+                   src=f"fuzz{seed}.py:{20 + li}")
         x = gb.add("add", [x, y], (B, H), "float32", layer=tag)
     gb.mark_output(x)
 
@@ -205,27 +205,27 @@ def fuzz_tp_mlp(seed: int, tag_layers: bool = True
     xd = gd.add("input", (), (B, H), "float32")
     pair.dist_inputs.append(xd)
     pair.input_relations.append(("dup", 0, 0, -1))
-    for l in range(n_layers):
-        tag = l if tag_layers else None
+    for li in range(n_layers):
+        tag = li if tag_layers else None
         w1d = gd.add("param", (), (H, F // c), "float32", layer=tag)
         w2d = gd.add("param", (), (F // c, H), "float32", layer=tag)
         i1 = len(pair.dist_inputs)
         pair.dist_inputs += [w1d, w2d]
         pair.input_relations += [("shard", i1, i1, 1),
                                  ("shard", i1 + 1, i1 + 1, 0)]
-        if chains[l] == "shared":
-            xd = _shared_chain(gd, xd, B, H, tag, f"fuzz{seed}.py:{40 + l}")
-        elif chains[l] == "dist_identity":
-            xd = _identity_chain(gd, xd, B, H, tag, f"fuzz{seed}.py:{50 + l}")
+        if chains[li] == "shared":
+            xd = _shared_chain(gd, xd, B, H, tag, f"fuzz{seed}.py:{40 + li}")
+        elif chains[li] == "dist_identity":
+            xd = _identity_chain(gd, xd, B, H, tag, f"fuzz{seed}.py:{50 + li}")
         hd = gd.add("dot", [xd, w1d], (B, F // c), "float32", dn, layer=tag,
-                    src=f"fuzz{seed}.py:{10 + l}")
-        td = gd.add(acts[l], [hd], (B, F // c), "float32", layer=tag)
+                    src=f"fuzz{seed}.py:{10 + li}")
+        td = gd.add(acts[li], [hd], (B, F // c), "float32", layer=tag)
         yd = gd.add("dot", [td, w2d], (B, H), "float32", dn, layer=tag,
-                    src=f"fuzz{seed}.py:{20 + l}")
-        if collectives[l] == "all_reduce":
+                    src=f"fuzz{seed}.py:{20 + li}")
+        if collectives[li] == "all_reduce":
             red = gd.add("all_reduce", [yd], (B, H), "float32",
                          {"reduce_op": "add", "axes": ("model",)}, layer=tag,
-                         src=f"fuzz{seed}.py:{100 + l}")
+                         src=f"fuzz{seed}.py:{100 + li}")
         else:
             # SP-style discharge: scatter the partial over the feature dim
             # (always divisible: width and hidden are multiples of size),
@@ -233,11 +233,11 @@ def fuzz_tp_mlp(seed: int, tag_layers: bool = True
             rs = gd.add("reduce_scatter", [yd], (B, H // c), "float32",
                         {"reduce_op": "add", "scatter_dimension": 1,
                          "axes": ("model",)}, layer=tag,
-                        src=f"fuzz{seed}.py:{100 + l}")
+                        src=f"fuzz{seed}.py:{100 + li}")
             red = gd.add("all_gather", [rs], (B, H), "float32",
                          {"all_gather_dimension": 1, "tiled": True,
                           "axes": ("model",)}, layer=tag,
-                         src=f"fuzz{seed}.py:{110 + l}")
+                         src=f"fuzz{seed}.py:{110 + li}")
         xd = gd.add("add", [xd, red], (B, H), "float32", layer=tag)
     gd.mark_output(xd)
     return pair, spec

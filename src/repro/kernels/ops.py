@@ -11,7 +11,6 @@ from __future__ import annotations
 from functools import partial
 
 import jax
-import jax.numpy as jnp
 
 from . import flash_attention as _fa
 from . import rmsnorm as _rn

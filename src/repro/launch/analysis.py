@@ -15,10 +15,8 @@ Hardware model (TPU v5e per chip): 197 TFLOP/s bf16, 819 GB/s HBM,
 """
 from __future__ import annotations
 
-import json
 import re
-from dataclasses import asdict, dataclass, field
-from typing import Any, Optional
+from dataclasses import asdict, dataclass
 
 from repro.core.ir import COLLECTIVES
 from repro.core.trace import trace

@@ -38,7 +38,7 @@ from repro.launch.mesh import dp_axes, make_production_mesh
 from repro.models import Model
 from repro.parallel.ctx import ParallelCtx
 from repro.parallel.sharding import batch_spec, cache_specs, param_specs
-from repro.train.optimizer import AdamWConfig, zero1_shard_flags
+from repro.train.optimizer import AdamWConfig
 from repro.train.trainer import TrainConfig, make_step_fn
 
 ARTIFACT_DIR = Path(__file__).resolve().parents[3] / "artifacts" / "dryrun"
@@ -190,7 +190,6 @@ def build_cell(arch: str, shape: str, mesh, *, zero1=False, sp=False, micro=0,
         fn = shard_map(step, mesh=mesh, in_specs=(pspecs, ospecs, bspecs),
                            out_specs=(pspecs, ospecs, mspecs), check_vma=False)
         avals = (param_shapes, opt_shapes, batch)
-        out_sharded_size = None
     elif spec.kind == "prefill":
         def step(params, b):
             return model.forward(params, b)

@@ -14,17 +14,15 @@ Usage (CPU demo, any arch):
 from __future__ import annotations
 
 import argparse
-import dataclasses
 import sys
 import time
 from pathlib import Path
 
 import jax
-import jax.numpy as jnp
 from jax.sharding import PartitionSpec as P
 
-from repro.configs import SHAPES, get_config
-from repro.configs.base import ARCH_IDS, ShapeSpec
+from repro.configs import get_config
+from repro.configs.base import ARCH_IDS
 from repro.data import DataConfig, SyntheticLM
 from repro.launch.mesh import make_debug_mesh
 from repro.models import Model

@@ -21,7 +21,7 @@ from jax import lax
 
 from repro.parallel.ctx import ParallelCtx
 
-from .modules import apply_rope, linear, linear_init, rmsnorm, rmsnorm_init, _init
+from .modules import apply_rope, linear, linear_init, rmsnorm, rmsnorm_init
 
 
 def attn_init(key, cfg, *, stacked: tuple = (), dtype=jnp.bfloat16):
@@ -80,7 +80,7 @@ def chunked_attention(
     a0 = jnp.zeros((B, Hkv, G, Sq, hd), jnp.float32)
 
     def body(carry, blk):
-        m, l, acc = carry
+        m, denom, acc = carry
         kb, vb, ci = blk
         s = jnp.einsum("bhgqd,bhkd->bhgqk", qg, kb,
                        preferred_element_type=jnp.float32) * scale
@@ -96,23 +96,23 @@ def chunked_attention(
         m_new = jnp.maximum(m, s.max(axis=-1))
         p = jnp.exp(s - m_new[..., None])
         corr = jnp.exp(m - m_new)
-        l_new = l * corr + p.sum(axis=-1)
+        denom_new = denom * corr + p.sum(axis=-1)
         acc_new = acc * corr[..., None] + jnp.einsum(
             "bhgqk,bhkd->bhgqd", p.astype(vb.dtype), vb,
             preferred_element_type=jnp.float32)
-        return (m_new, l_new, acc_new), None
+        return (m_new, denom_new, acc_new), None
 
     if unroll:  # verification traces: no scan nodes (paper-style unrolled IR)
         carry = (m0, l0, a0)
         for ci in range(n_chunks):
             carry, _ = body(carry, (kc[ci], vc[ci], jnp.int32(ci)))
-        m, l, acc = carry
+        m, denom, acc = carry
     else:
-        (m, l, acc), _ = lax.scan(body, (m0, l0, a0), (kc, vc, jnp.arange(n_chunks)))
+        (m, denom, acc), _ = lax.scan(body, (m0, l0, a0), (kc, vc, jnp.arange(n_chunks)))
     if with_stats:
         scope.__exit__(None, None, None)
-        return acc, m, l
-    out = acc / jnp.maximum(l[..., None], 1e-30)
+        return acc, m, denom
+    out = acc / jnp.maximum(denom[..., None], 1e-30)
     out = out.reshape(B, Hq, Sq, hd).astype(q.dtype)
     scope.__exit__(None, None, None)
     return out
@@ -196,13 +196,13 @@ def attn_decode(cfg, ctx: ParallelCtx, p, x, cache, position, *, unroll: bool = 
         new_v = lax.dynamic_update_slice_in_dim(cache["v"], v_upd, write_pos, axis=2)
         k_off = shard * S_loc
         kv_len = position + 1
-        acc, m, l = chunked_attention(
+        acc, m, denom = chunked_attention(
             q, new_k, new_v, causal=False, q_offset=0, k_offset=k_off,
             kv_len=kv_len, with_stats=True, unroll=unroll)
         # flash-decode merge across shards (verified pattern, paper §7.1)
         m_g = ctx.pmax_cp(m)
         corr = jnp.exp(m - m_g)
-        l_g = ctx.psum_cp(l * corr)
+        l_g = ctx.psum_cp(denom * corr)
         acc_g = ctx.psum_cp(acc * corr[..., None])
         out = acc_g / jnp.maximum(l_g[..., None], 1e-30)
         out = out.reshape(B, Hq_loc, 1, hd).astype(q.dtype)

@@ -13,7 +13,6 @@ single-device baseline (ctx.single()) and the per-device SPMD program
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Any, Optional
 
 import jax
@@ -185,10 +184,10 @@ class Model:
         P = cfg.block_period
 
         if unroll:
-            for l in range(cfg.n_layers):
-                with jax.named_scope(f"layer{l}"):
-                    lp = _tree_index(params["blocks"][l % P], l // P)
-                    x = self._layer_fwd(lp, x, positions, l % P, unroll=True)
+            for li in range(cfg.n_layers):
+                with jax.named_scope(f"layer{li}"):
+                    lp = _tree_index(params["blocks"][li % P], li // P)
+                    x = self._layer_fwd(lp, x, positions, li % P, unroll=True)
         else:
             def block(carry, bparams):
                 h = carry

@@ -14,7 +14,6 @@ output row-projection needs a psum.  Decode keeps O(1) state per head.
 """
 from __future__ import annotations
 
-import math
 
 import jax
 import jax.numpy as jnp
@@ -181,7 +180,6 @@ def ssm_decode(cfg, ctx: ParallelCtx, p, x, cache):
     """Single-token SSD step: O(1) state update.  x: (B, 1, D)."""
     B = x.shape[0]
     P = cfg.ssm_head_dim
-    K = cfg.ssm_conv
     xproj = linear(p["wx"], x)[:, 0]  # (B, DI_loc)
     z = linear(p["wz"], x)[:, 0]
     Bm = linear(p["wB"], x)[:, 0]

@@ -9,7 +9,6 @@ regression) changes the fingerprint and the region stays unverified.
 """
 from __future__ import annotations
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 

@@ -17,11 +17,9 @@ Axis roles over the production mesh (launch/mesh.py):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, replace
+from dataclasses import dataclass
 from typing import Optional
 
-import jax
-import jax.numpy as jnp
 from jax import lax
 
 

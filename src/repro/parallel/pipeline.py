@@ -21,10 +21,8 @@ is the only cross-stage edge.
 """
 from __future__ import annotations
 
-from functools import partial
 from typing import Callable
 
-import jax
 import jax.numpy as jnp
 from jax import lax
 

@@ -11,7 +11,7 @@ the context-parallel flash-decode path inside the model.
 from __future__ import annotations
 
 from dataclasses import dataclass, field
-from typing import Callable, Optional
+from typing import Optional
 
 import jax
 import jax.numpy as jnp

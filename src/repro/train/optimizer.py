@@ -10,8 +10,6 @@ simple, deterministic, and enough to cut optimizer memory by ~dp_size.
 from __future__ import annotations
 
 from dataclasses import dataclass
-from functools import partial
-from typing import Any, Optional
 
 import jax
 import jax.numpy as jnp
@@ -53,7 +51,7 @@ def adamw_init(params) -> dict:
 
 def global_norm(tree) -> jnp.ndarray:
     leaves = jax.tree_util.tree_leaves(tree)
-    return jnp.sqrt(sum(jnp.sum(jnp.square(l.astype(jnp.float32))) for l in leaves))
+    return jnp.sqrt(sum(jnp.sum(jnp.square(leaf.astype(jnp.float32))) for leaf in leaves))
 
 
 def adamw_update(cfg: AdamWConfig, params, grads, state, *, extra_norm_sq=None):

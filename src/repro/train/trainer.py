@@ -9,19 +9,16 @@ The same step function serves three consumers:
 """
 from __future__ import annotations
 
-from dataclasses import dataclass, field
-from functools import partial
-from typing import Any, Optional
+from dataclasses import dataclass
 
 import jax
 import jax.numpy as jnp
 from jax import lax
 
 from repro.models import Model
-from repro.parallel.ctx import ParallelCtx
 
 from .compression import allreduce_compressed
-from .optimizer import AdamWConfig, adamw_init, adamw_update, zero1_update
+from .optimizer import AdamWConfig, adamw_update, zero1_update
 
 
 @dataclass(frozen=True)

@@ -6,11 +6,19 @@
     python -m repro.verify --list
     python -m repro.verify --list-injectors
     python -m repro.verify campaign --arch llama3_8b --tp 4 [--seeds N]
+    python -m repro.verify lint --arch gemma_2b --tp 4 [--passes ...] [--json -]
+    python -m repro.verify rulecheck [--ops-from ARCH] [--json -]
 
 The ``campaign`` verb runs the detection-benchmark matrix
 (:mod:`repro.verify.campaign`): every registered injector x every
 applicable scenario x every ``--arch``, plus ``--seeds`` fuzzer seeds;
 exit 1 on any missed detection or clean-cell false positive.
+
+The ``lint`` verb runs the baseline-free static analysis tier
+(:mod:`repro.analysis`) over single traced graphs — no golden pair needed;
+exit 1 on any error-severity finding.  The ``rulecheck`` verb statically
+checks the rule registry itself (dead rules, orphan fact kinds,
+declaration drift, op coverage); exit 1 on any gate failure.
 
 Exit codes (stable contract for CI and launcher scripts):
 
@@ -99,6 +107,11 @@ def build_parser() -> argparse.ArgumentParser:
                          "selects the mutation site and defaults to 1 — the "
                          "first layer collective rather than the embedding "
                          "region (same convention as the bug benchmarks)")
+    ap.add_argument("--lint", action="store_true",
+                    help="lint preflight: run the baseline-free static tier "
+                         "over each scenario's distributed graph and fold "
+                         "the result into the report (Report.lint); the "
+                         "relational verdict is unaffected")
     ap.add_argument("--quiet", action="store_true",
                     help="suppress the human-readable summary")
     return ap
@@ -125,11 +138,20 @@ def _plan_of(args) -> Plan:
 
 
 def _print_list() -> None:
+    from repro.analysis import DEFAULT_LINTS
+    from repro.core.inject import DEFAULT_INJECTORS
+
     from .scenarios import DEFAULT_SCENARIOS
 
     known = sorted(set(ARCH_IDS) | set(EXTRA_IDS))
     print("registered scenarios:")
     for line in DEFAULT_SCENARIOS.describe().splitlines():
+        print(f"  {line}")
+    print("\nregistered injectors:")
+    for line in DEFAULT_INJECTORS.describe().splitlines():
+        print(f"  {line}")
+    print("\nregistered lint passes:")
+    for line in DEFAULT_LINTS.describe().splitlines():
         print(f"  {line}")
     print("\nknown archs:")
     print("  " + " ".join(known))
@@ -241,10 +263,154 @@ def _print_injectors() -> None:
         print(f"  {line}")
 
 
+def build_lint_parser() -> argparse.ArgumentParser:
+    ap = _Parser(
+        prog="python -m repro.verify lint",
+        description="Baseline-free static analysis over single traced "
+                    "graphs: IR well-formedness + sharding-semantics lints "
+                    "(no golden pair required).")
+    ap.add_argument("--arch", action="append", default=None,
+                    help="architecture id (repeatable; 'all' = the full zoo)")
+    ap.add_argument("--tp", type=int, action="append", default=None,
+                    help="tensor-parallel degree (repeatable; default 1)")
+    ap.add_argument("--sp", action="store_true",
+                    help="lint the sequence-parallel forward (tp > 1 only)")
+    ap.add_argument("--layers", type=int, default=2,
+                    help="layer-count override (rounded to block periods)")
+    ap.add_argument("--batch", type=int, default=1)
+    ap.add_argument("--seq", type=int, default=32)
+    ap.add_argument("--smoke", action="store_true",
+                    help="reduced config (tp=1 only: smoke head counts "
+                         "break tp divisibility)")
+    ap.add_argument("--passes", default=None,
+                    help="comma-separated lint-pass subset (default: all; "
+                         "unknown names exit 2 listing the registered set)")
+    ap.add_argument("--inject", metavar="INJECTOR[:INDEX]", default=None,
+                    help="inject a bug into the traced graph before linting "
+                         "(testing/demo; same convention as the verify verb)")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the machine-readable lint report ('-' = stdout)")
+    ap.add_argument("--quiet", action="store_true",
+                    help="suppress the human-readable summary")
+    return ap
+
+
+def lint_main(argv: Optional[list] = None) -> int:
+    from repro.analysis import (DEFAULT_LINTS, LintError, LintReport,
+                                run_lints, trace_lint_unit, unit_context)
+    from repro.core.inject import InjectorError
+
+    args = build_lint_parser().parse_args(argv)
+    archs = args.arch or []
+    if "all" in archs:
+        archs = [a for a in archs if a != "all"] + list(ARCH_IDS)
+    archs = list(dict.fromkeys(archs))  # dedupe, keep order
+    if not archs:
+        print("error: lint needs at least one --arch ('all' = the zoo)",
+              file=sys.stderr)
+        return EXIT_USAGE
+    known = set(ARCH_IDS) | set(EXTRA_IDS)
+    for a in archs:
+        if a not in known:
+            print(f"error: unknown arch {a!r} "
+                  f"(known: {', '.join(sorted(known))})", file=sys.stderr)
+            return EXIT_USAGE
+    tps = args.tp or [1]
+    passes = ([p for p in args.passes.split(",") if p]
+              if args.passes else None)
+    try:
+        if passes:
+            DEFAULT_LINTS.resolve(passes)  # unknown pass -> exit 2, listed
+        mutate = _injector_of(args.inject) if args.inject else None
+        merged = LintReport()
+        for arch in archs:
+            for tp in tps:
+                unit = trace_lint_unit(arch, tp, sp=args.sp,
+                                       layers=args.layers, batch=args.batch,
+                                       seq=args.seq, smoke=args.smoke)
+                if mutate is not None:
+                    unit = unit.mutate(mutate)
+                merged = merged.merge(
+                    run_lints(unit_context(unit), passes=passes))
+    except (LintError, PlanError, InjectorError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return EXIT_USAGE
+    except ValueError as e:
+        print(f"error: trace invalid for requested plan: {e}",
+              file=sys.stderr)
+        return EXIT_USAGE
+
+    summary_stream = sys.stdout
+    if args.json == "-":
+        print(merged.to_json(indent=2))
+        summary_stream = sys.stderr  # keep stdout pure JSON
+    elif args.json:
+        with open(args.json, "w") as fh:
+            fh.write(merged.to_json(indent=2) + "\n")
+    if not args.quiet:
+        print(merged.summary(), file=summary_stream)
+    return EXIT_VERIFIED if merged.ok else EXIT_UNVERIFIED
+
+
+def build_rulecheck_parser() -> argparse.ArgumentParser:
+    ap = _Parser(
+        prog="python -m repro.verify rulecheck",
+        description="Static checker for the rule registry: dead rules, "
+                    "orphan fact kinds, declaration drift, op coverage.")
+    ap.add_argument("--ops-from", action="append", default=None,
+                    metavar="ARCH",
+                    help="trace this arch and report registry op coverage "
+                         "against its ops (repeatable; 'all' = the zoo; "
+                         "informational, does not gate)")
+    ap.add_argument("--tp", type=int, default=4,
+                    help="tensor-parallel degree for --ops-from traces")
+    ap.add_argument("--json", metavar="PATH", default=None,
+                    help="write the machine-readable report ('-' = stdout)")
+    ap.add_argument("--quiet", action="store_true")
+    return ap
+
+
+def rulecheck_main(argv: Optional[list] = None) -> int:
+    from repro.analysis import check_registry, trace_ops
+
+    args = build_rulecheck_parser().parse_args(argv)
+    archs = args.ops_from or []
+    if "all" in archs:
+        archs = [a for a in archs if a != "all"] + list(ARCH_IDS)
+    archs = list(dict.fromkeys(archs))
+    known = set(ARCH_IDS) | set(EXTRA_IDS)
+    for a in archs:
+        if a not in known:
+            print(f"error: unknown arch {a!r} "
+                  f"(known: {', '.join(sorted(known))})", file=sys.stderr)
+            return EXIT_USAGE
+    try:
+        traced = trace_ops(archs, tp=args.tp) if archs else None
+    except (PlanError, ValueError) as e:
+        print(f"error: {e}", file=sys.stderr)
+        return EXIT_USAGE
+    report = check_registry(traced_ops=traced)
+
+    summary_stream = sys.stdout
+    if args.json == "-":
+        print(report.to_json(indent=2))
+        summary_stream = sys.stderr
+    elif args.json:
+        with open(args.json, "w") as fh:
+            fh.write(report.to_json(indent=2) + "\n")
+    if not args.quiet:
+        print(report.summary(), file=summary_stream)
+    return EXIT_VERIFIED if report.ok else EXIT_UNVERIFIED
+
+
 def main(argv: Optional[list] = None) -> int:
     argv = sys.argv[1:] if argv is None else argv
     if argv and argv[0] == "campaign":
         return campaign_main(argv[1:])
+    if argv and argv[0] == "lint":
+        return lint_main(argv[1:])
+    if argv and argv[0] == "rulecheck":
+        return rulecheck_main(argv[1:])
     args = build_parser().parse_args(argv)
     if args.list:
         _print_list()
@@ -279,7 +445,8 @@ def main(argv: Optional[list] = None) -> int:
                             stamp=not args.no_stamp)
     try:
         with Session(options=options) as session:
-            report = session.verify(args.arch, plan, mutate_dist=mutate)
+            report = session.verify(args.arch, plan, mutate_dist=mutate,
+                                    lint=args.lint)
     except PlanError as e:
         print(f"error: {e}", file=sys.stderr)
         return EXIT_USAGE

@@ -26,7 +26,16 @@ from .scenarios import tp as _tp
 from .scenarios.harness import BuildCtx as _BuildCtx
 
 
+# names that already warned — each deprecated entry point emits exactly
+# once per process, so a hot loop over a legacy builder can't flood logs
+# (tests reset this set directly).  Removal timeline: docs/API.md.
+_warned: set = set()
+
+
 def _warn(old: str, new: str) -> None:
+    if old in _warned:
+        return
+    _warned.add(old)
     warnings.warn(
         f"repro.verify.pairs.{old} is deprecated; use {new}",
         DeprecationWarning, stacklevel=3)

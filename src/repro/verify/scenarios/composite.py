@@ -90,5 +90,5 @@ def tpdp_forward(arch: str, cfg, plan, scen, ctx: BuildCtx) -> GraphPair:
         gb, gd, b_in, d_in,
         input_facts=spec_input_facts(flat_specs, axis=DP_AXIS),
         output_specs=[OutputSpec(kind="shard", dim=0)],
-        size=dp, axis=DP_AXIS,
+        size=dp, axis=DP_AXIS, mesh_axes=(DP_AXIS, TP_AXIS),
         trace_s=time.perf_counter() - t0, base_cached=ctx.base_cached)

@@ -45,6 +45,10 @@ class GraphPair:
     stamp_s: float = 0.0
     stamped: bool = False
     base_cached: bool = False  # base trace served from the shared cache
+    # every axis the dist program's mesh declares (empty = just ``axis``);
+    # multi-axis scenarios set this so lint's ghost-axis check knows the
+    # orthogonal axes are legitimate
+    mesh_axes: tuple = ()
 
 
 @dataclass

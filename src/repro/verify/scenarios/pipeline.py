@@ -59,10 +59,10 @@ def stage_pair(arch: str, cfg, tp: int, stg: int, stages: int,
             else:
                 x = x_or_batch
             positions = jnp.arange(seq)
-            for l in range(lo, hi):
-                with jax.named_scope(f"layer{l}"):
-                    lp = _tree_index(params["blocks"][l % Pnum], l // Pnum)
-                    x = model._layer_fwd(lp, x, positions, l % Pnum, unroll=True)
+            for li in range(lo, hi):
+                with jax.named_scope(f"layer{li}"):
+                    lp = _tree_index(params["blocks"][li % Pnum], li // Pnum)
+                    x = model._layer_fwd(lp, x, positions, li % Pnum, unroll=True)
             if last:
                 x = model.ctx.sp_exit(x)
                 x = rmsnorm(params["ln_f"], x, cfg.norm_eps)

@@ -128,7 +128,7 @@ class Session:
     def verify(self, arch: str, plan: Optional[Plan] = None, *,
                options: Optional[VerifyOptions] = None,
                mutate_dist=None, mutate_pure: bool = False,
-               **plan_kw) -> Report:
+               lint: bool = False, **plan_kw) -> Report:
         """Verify ``arch`` under ``plan`` (or ``Plan(**plan_kw)``).
 
         ``mutate_dist`` (testing/bug-injection hook) receives each
@@ -141,7 +141,13 @@ class Session:
         the *unmutated* pair is then served from / stored into the
         graph-pair cache, so an injection campaign pays one trace per
         scenario instead of one per cell.  Template caches stay bypassed
-        either way (they describe the unmutated pair)."""
+        either way (they describe the unmutated pair).
+
+        ``lint=True`` runs the baseline-free static tier
+        (:mod:`repro.analysis`) over each scenario's distributed graph —
+        after mutation, so injected bugs are linted — and attaches the
+        result as ``Report.lint`` (a ``LintReport.to_dict()``); the
+        relational verdict is unaffected."""
         if plan is not None and plan_kw:
             raise TypeError(
                 f"pass either a Plan or plan keywords, not both "
@@ -154,14 +160,15 @@ class Session:
         for scen in plan.scenarios():
             results.append(
                 (scen, self._run_scenario(arch, cfg_h, plan, scen, options,
-                                          mutate_dist, mutate_pure)))
+                                          mutate_dist, mutate_pure,
+                                          lint=lint)))
         report = _merge(arch, plan, results)
         report.elapsed_s = time.perf_counter() - t0
         return report
 
     def _run_scenario(self, arch: str, cfg_h: str, plan: Plan, scen: Scenario,
                       options: VerifyOptions, mutate_dist,
-                      mutate_pure: bool = False) -> Report:
+                      mutate_pure: bool = False, lint: bool = False) -> Report:
         key = (arch, cfg_h, scen.name, scen.size, plan.layers, plan.batch,
                plan.seq, plan.max_len, plan.stages, plan.tp, options.stamp)
         cacheable = mutate_dist is None or mutate_pure
@@ -204,6 +211,8 @@ class Session:
         )
         rep.cache.trace_cached = cached
         rep.cache.base_trace_cached = pair.base_cached
+        if lint:
+            rep.lint = _lint_pair(arch, pair, dist).to_dict()
         return rep
 
     # ------------------------------------------------- function-pair entry
@@ -215,6 +224,28 @@ class Session:
 
         kw.setdefault("options", self.options)
         return _vs(base_fn, dist_fn, *avals, **kw)
+
+
+def _lint_pair(arch: str, pair: GraphPair, dist):
+    """Lint-preflight one scenario's distributed graph (post-mutation)."""
+    from repro.analysis import pair_lint_unit, run_lints, unit_context
+
+    unit = pair_lint_unit(pair, arch=arch)
+    if dist is not pair.dist:
+        unit = unit.mutate(lambda _g: dist)
+    return run_lints(unit_context(unit))
+
+
+def _merge_lint(dicts: list) -> dict:
+    """Fold per-scenario LintReport dicts into one (multi-scenario plans)."""
+    import json as _json
+
+    from repro.analysis import LintReport
+
+    merged = LintReport()
+    for d in dicts:
+        merged = merged.merge(LintReport.from_json(_json.dumps(d)))
+    return merged.to_dict()
 
 
 def _merge(arch: str, plan: Plan, results) -> Report:
@@ -236,6 +267,7 @@ def _merge(arch: str, plan: Plan, results) -> Report:
             "trace_cached": rep.cache.trace_cached,
             "base_trace_cached": rep.cache.base_trace_cached,
             "fp_cached": rep.cache.fp_cached,
+            "lint_ok": rep.lint.get("ok") if rep.lint is not None else None,
         }
         for scen, rep in results
     ]
@@ -274,6 +306,9 @@ def _merge(arch: str, plan: Plan, results) -> Report:
                 settled_nodes=sum(r.cache.settled_nodes for r in reps),
             ),
         )
+        lints = [r.lint for r in reps if r.lint is not None]
+        if lints:
+            rep.lint = _merge_lint(lints)
     rep.arch = arch
     rep.plan = plan.to_dict()
     rep.scenarios = scen_rows

@@ -1,0 +1,138 @@
+"""Tests for the CI perf gate (benchmarks/check_regression.py): the
+calibration clamp, the >25% regression trip, and missing-row handling.
+The checker gates every PR but was itself untested."""
+import importlib.util
+import json
+import sys
+from pathlib import Path
+
+import pytest
+
+_CHECKER = Path(__file__).resolve().parent.parent / "benchmarks" / "check_regression.py"
+_spec = importlib.util.spec_from_file_location("check_regression", _CHECKER)
+cr = importlib.util.module_from_spec(_spec)
+_spec.loader.exec_module(cr)
+
+# a well-over-floor time for gated rows (floor is 50ms)
+BASE_US = 1_000_000.0
+
+
+def rows(scale: float = 1.0, cal: float = 200_000.0, **overrides):
+    """A full gated-row dict at ``scale``x the baseline time."""
+    r = {name: BASE_US * scale for name in cr.GATED_ROWS}
+    # keep the fig11c self-ratio comfortably under its 4.0 gate
+    r["fig11c_layers_4"] = 100_000.0 * scale
+    r["fig11c_layers_32"] = 300_000.0 * scale
+    r[cr.CALIBRATION_ROW] = cal
+    r.update(overrides)
+    return r
+
+
+# ------------------------------------------------------------ gate trip
+
+def test_identical_results_pass(capsys):
+    assert cr.check(rows(), rows()) == 0
+    assert "FAIL" not in capsys.readouterr().out
+
+
+def test_within_tolerance_passes():
+    assert cr.check(rows(1.2), rows()) == 0  # 20% < 25% gate
+
+
+def test_over_tolerance_trips(capsys):
+    assert cr.check(rows(1.3), rows()) == 1  # 30% > 25% gate
+    out = capsys.readouterr().out
+    assert "exceeds 1.25x gate" in out
+
+
+def test_single_row_regression_trips():
+    res = rows(**{"table2_M1_mixtral_8x7b": BASE_US * 1.5})
+    assert cr.check(res, rows()) == 1
+
+
+def test_fig11c_ratio_gate_trips():
+    res = rows(**{"fig11c_layers_32": 100_000.0 * cr.FIG11C_MAX_RATIO * 1.1})
+    assert cr.check(res, rows()) == 1
+
+
+# ------------------------------------------------------------ calibration
+
+def test_slow_runner_calibrated_away():
+    # everything 1.8x slower, calibration too: speed factor absorbs it
+    assert cr.check(rows(1.8, cal=360_000.0), rows()) == 0
+
+
+def test_calibration_clamp_upper_bound():
+    # calibration claims 10x slower but the clamp caps the factor at 2x,
+    # so a 3x regression still trips
+    assert cr.check(rows(3.0, cal=2_000_000.0), rows()) == 1
+
+
+def test_calibration_clamp_lower_bound(capsys):
+    # calibration claims a 10x faster runner; clamp floors the factor at
+    # 0.5x, so an actual 2.1x regression cannot be masked... and a row at
+    # parity (1.0x raw = 2.0x adjusted) trips, proving the 0.5 floor binds
+    assert cr.check(rows(1.0, cal=20_000.0), rows()) == 1
+    assert "speed factor 0.50" in capsys.readouterr().out
+
+
+def test_missing_calibration_is_raw_compare(capsys):
+    res = rows()
+    del res[cr.CALIBRATION_ROW]
+    assert cr.check(res, rows()) == 0
+    assert "calibration_spin missing" in capsys.readouterr().out
+
+
+# ------------------------------------------------------------ missing rows
+
+def test_gated_row_missing_from_results_fails(capsys):
+    res = rows()
+    del res["table2_L1_llama3_8b"]
+    assert cr.check(res, rows()) == 1
+    assert "missing from results" in capsys.readouterr().out
+
+
+def test_gated_row_missing_from_baseline_warns_only(capsys):
+    base = rows()
+    del base["table2_L1_llama3_8b"]
+    assert cr.check(rows(), base) == 0
+    assert "not in baseline" in capsys.readouterr().out
+
+
+def test_noise_floor_rows_skipped(capsys):
+    # under the 50ms floor the 25% gate does not apply even at 10x
+    base = rows(**{"fig12_memo_stamp": 1_000.0})
+    res = rows(**{"fig12_memo_stamp": 10_000.0})
+    assert cr.check(res, base) == 0
+    assert "floor, skipped" in capsys.readouterr().out
+
+
+def test_empty_baseline_passes_with_fig11c_only():
+    # --baseline missing path: check(results, {}) still enforces fig11c
+    assert cr.check(rows(), {}) == 0
+    bad = rows(**{"fig11c_layers_32": 100_000.0 * 5})
+    assert cr.check(bad, {}) == 1
+
+
+# ------------------------------------------------------------ schema
+
+def test_load_rows_schema2_and_legacy(tmp_path):
+    v2 = tmp_path / "v2.json"
+    v2.write_text(json.dumps({"schema": 2, "rows": {"a": 1.0}}))
+    assert cr.load_rows(v2) == {"a": 1.0}
+    v1 = tmp_path / "v1.json"
+    v1.write_text(json.dumps({"a": 2.0}))
+    assert cr.load_rows(v1) == {"a": 2.0}
+    bad = tmp_path / "bad.json"
+    bad.write_text(json.dumps({"schema": 3, "rows": {}}))
+    with pytest.raises(SystemExit):
+        cr.load_rows(bad)
+
+
+def test_main_missing_results_file(tmp_path, monkeypatch, capsys):
+    monkeypatch.setattr(sys, "argv",
+                        ["check_regression.py",
+                         "--results", str(tmp_path / "none.json"),
+                         "--baseline", str(tmp_path / "none2.json")])
+    assert cr.main() == 1
+    assert "results file" in capsys.readouterr().out

@@ -1,8 +1,5 @@
 """Checkpointing + fault tolerance: roundtrip, atomicity under torn writes,
 elastic resume, deterministic data replay."""
-import os
-import shutil
-from pathlib import Path
 
 import jax
 import jax.numpy as jnp

@@ -1,6 +1,5 @@
 """E-graph invariants: union-find, hashcons/congruence closure, and the
 structural rewrite saturation (hypothesis property tests)."""
-import numpy as np
 import pytest
 
 pytest.importorskip("hypothesis")  # property tests need it; plain tests run without

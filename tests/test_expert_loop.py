@@ -6,8 +6,6 @@ of slices and adds, discharged by one all_reduce — the paper's
 relate per-device slice chunks (different baseline slices at different
 ranks!) through the accumulation and discharge it against the baseline
 add-chain over all experts."""
-import numpy as np
-import pytest
 
 from repro.core.ir import Graph
 from repro.core.relations import DUP, LOOPRED, SLICEGRP

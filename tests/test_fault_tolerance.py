@@ -2,7 +2,6 @@
 deadline-bounded prefetcher."""
 import time
 
-import jax
 import jax.numpy as jnp
 import numpy as np
 

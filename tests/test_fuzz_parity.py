@@ -6,12 +6,7 @@ deterministic."""
 import pytest
 
 from repro.core.rules import Propagator, WorklistEngine
-from repro.core.synth import (
-    fuzz_inject,
-    fuzz_tp_mlp,
-    input_facts_of,
-    register_inputs,
-)
+from repro.core.synth import fuzz_inject, fuzz_tp_mlp, input_facts_of
 from repro.core.verifier import VerifyOptions, verify_graphs
 
 SEEDS = list(range(12))

@@ -1,0 +1,168 @@
+"""The static-analysis (lint) tier: clean zoo graphs are finding-free,
+injected bugs are flagged baseline-free with the faulty op localized,
+and the CLI verb follows the campaign's exit-code conventions."""
+import json
+
+import pytest
+
+from repro.analysis import (
+    DEFAULT_LINTS,
+    LintError,
+    LintReport,
+    run_lints,
+    trace_lint_unit,
+    unit_context,
+)
+from repro.core.inject import DEFAULT_INJECTORS
+from repro.verify.cli import main as cli_main
+
+ARCH = "gemma_2b"
+TP = 4
+
+
+def _lint(arch=ARCH, tp=TP, mutate=None, **kw):
+    unit = trace_lint_unit(arch, tp, layers=kw.pop("layers", 2), **kw)
+    if mutate is not None:
+        unit = unit.mutate(mutate)
+    return run_lints(unit_context(unit))
+
+
+def _injector(name, index=1):
+    spec = DEFAULT_INJECTORS.get(name)
+
+    def mutate(g):
+        inj = spec(g, index=index) or spec(g)  # CLI convention: fall back
+        assert inj is not None, f"{name}: no injection site"
+        return inj.graph
+
+    return mutate
+
+
+# ------------------------------------------------------------ clean graphs
+
+@pytest.mark.parametrize("tp", [1, 4])
+def test_clean_arch_is_finding_free(tp):
+    rep = _lint(tp=tp)
+    assert rep.ok and rep.errors == 0 and rep.warnings == 0, rep.summary()
+    assert len(rep.passes) == len(DEFAULT_LINTS.resolve())
+
+
+def test_sp_variant_clean():
+    rep = _lint(tp=TP, sp=True)
+    assert rep.ok and rep.warnings == 0, rep.summary()
+
+
+# ------------------------------------------------ baseline-free detection
+# Acceptance floor: >=3 injectors — including missing_all_reduce and a
+# wrong-axis collective — flagged by lint ALONE, faulty op localized.
+
+def test_drop_all_reduce_flagged_and_localized():
+    rep = _lint(mutate=_injector("drop_all_reduce"))
+    assert not rep.ok
+    cats = {f.category for f in rep.findings}
+    assert "missing_all_reduce" in cats, rep.summary()
+    # localization: the finding names the op consuming/leaking the partial
+    top = rep.findings[0]
+    assert top.node >= 0 and top.op, rep.summary()
+
+
+def test_wrong_collective_axis_flagged():
+    rep = _lint(mutate=_injector("wrong_collective_axis"))
+    assert not rep.ok
+    assert any(f.pass_name == "collective-axis" and f.op == "all_reduce"
+               for f in rep.findings), rep.summary()
+
+
+def test_wrong_replica_groups_flagged():
+    rep = _lint(mutate=_injector("wrong_replica_groups"))
+    assert not rep.ok
+    assert any(f.pass_name == "collective-axis" and f.op == "all_reduce"
+               for f in rep.findings), rep.summary()
+
+
+def test_duplicate_all_reduce_flagged():
+    rep = _lint(mutate=_injector("duplicate_all_reduce"))
+    assert not rep.ok
+    assert any(f.pass_name == "redundant-collective"
+               for f in rep.findings), rep.summary()
+
+
+def test_invisible_injector_stays_clean():
+    # shifted_slice yields a well-formed, consistently-sharded graph that
+    # is simply a *different program*: only the relational tier can see
+    # it.  Lint staying silent here is the zero-false-positive contract.
+    rep = _lint(mutate=_injector("shifted_slice"))
+    assert rep.ok, rep.summary()
+
+
+# ------------------------------------------------------------ registry
+
+def test_unknown_pass_raises_listing_registered():
+    unit = trace_lint_unit(ARCH, 1, layers=1)
+    with pytest.raises(LintError) as ei:
+        run_lints(unit_context(unit), passes=["no-such-pass"])
+    msg = str(ei.value)
+    assert "ir-ssa" in msg and "partial-leak" in msg
+
+
+def test_pass_subset_runs_only_requested():
+    unit = trace_lint_unit(ARCH, 1, layers=1)
+    rep = run_lints(unit_context(unit), passes=["ir-ssa", "ir-shapes"])
+    assert sorted(rep.passes) == ["ir-shapes", "ir-ssa"]
+
+
+# ------------------------------------------------------------ report
+
+def test_report_json_round_trip():
+    rep = _lint(mutate=_injector("drop_all_reduce"))
+    back = LintReport.from_json(rep.to_json())
+    assert back.errors == rep.errors and back.ok == rep.ok
+    assert [f.category for f in back.findings] == \
+        [f.category for f in rep.findings]
+    with pytest.raises(ValueError):
+        LintReport.from_json(json.dumps({"schema": 99}))
+
+
+def test_merge_folds_units_and_counts():
+    a, b = _lint(tp=1), _lint(mutate=_injector("drop_all_reduce"))
+    n_units = len(a.units) + len(b.units)
+    merged = LintReport().merge(a).merge(b)
+    assert len(merged.units) == n_units
+    assert merged.errors == b.errors and not merged.ok
+
+
+# ------------------------------------------------------------ CLI verb
+
+def test_cli_lint_clean_exit0(tmp_path, capsys):
+    out = tmp_path / "lint.json"
+    rc = cli_main(["lint", "--arch", ARCH, "--tp", "1", "--tp", "4",
+                   "--layers", "2", "--json", str(out)])
+    assert rc == 0
+    d = json.loads(out.read_text())
+    assert d["ok"] and d["errors"] == 0 and len(d["units"]) == 2
+
+
+def test_cli_lint_inject_exit1(capsys):
+    rc = cli_main(["lint", "--arch", ARCH, "--tp", "4", "--layers", "2",
+                   "--inject", "drop_all_reduce"])
+    assert rc == 1
+    cap = capsys.readouterr()
+    assert "missing_all_reduce" in cap.out + cap.err
+
+
+def test_cli_lint_usage_errors(capsys):
+    assert cli_main(["lint", "--arch", "nope"]) == 2
+    assert cli_main(["lint", "--arch", ARCH, "--passes", "bogus"]) == 2
+    err = capsys.readouterr().err
+    assert "ir-ssa" in err  # unknown pass lists the registered set
+    assert cli_main(["lint", "--arch", ARCH, "--tp", "4",
+                     "--inject", "bogus"]) == 2
+
+
+def test_cli_list_enumerates_lint_passes(capsys):
+    assert cli_main(["--list"]) == 0
+    out = capsys.readouterr().out
+    for name in ("ir-ssa", "partial-leak", "collective-axis",
+                 "redundant-collective"):
+        assert name in out
+    assert "drop_all_reduce" in out  # injectors ride along

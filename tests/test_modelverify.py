@@ -3,7 +3,6 @@ must verify end-to-end at full published dimensions (reduced layer count),
 and injected bugs in model graphs must be caught + localized."""
 import pytest
 
-from repro.configs.base import ARCH_IDS
 from repro.core.modelverify import verify_model_tp
 
 FAST = [

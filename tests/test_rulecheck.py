@@ -1,0 +1,150 @@
+"""The rule-registry static checker: the shipped registry must be clean
+(dead rules / orphan kinds / drift gate CI), and each defect class must
+actually trip on a synthetic registry built to exhibit it."""
+import json
+
+from repro.analysis import check_registry, trace_ops
+from repro.core.relations import DUP, LOOPRED, SHARD, SLICEGRP
+from repro.core.rules.registry import DEFAULT_REGISTRY, RuleRegistry
+
+ARCH = "gemma_2b"
+
+
+def _registry(*rules):
+    """RuleRegistry from (name, ops, consumes, produces) tuples."""
+    reg = RuleRegistry()
+    for name, ops, consumes, produces in rules:
+        reg.rule(name, ops, consumes=consumes, produces=produces)(
+            lambda prop, node: None)
+    return reg
+
+
+# ------------------------------------------------------------ the real one
+
+def test_shipped_registry_is_clean():
+    rep = check_registry()
+    assert rep.ok, rep.summary()
+    assert not rep.dead_rules and not rep.orphan_kinds and not rep.drift
+    assert rep.num_rules == len(DEFAULT_REGISTRY.rules)
+    # every kind is produced by someone (or seeded) and consumed by someone
+    assert rep.producers[SHARD] and rep.consumers[SHARD]
+
+
+def test_shipped_registry_covers_zoo_ops():
+    ops = trace_ops([ARCH], tp=4)
+    rep = check_registry(traced_ops=ops)
+    assert rep.ok, rep.summary()
+    assert rep.num_ops > 0
+    # uncovered ops are informational, never gate
+    assert isinstance(rep.uncovered_ops, list)
+
+
+def test_report_json_shape():
+    d = json.loads(check_registry().to_json())
+    assert d["schema"] == 1 and d["ok"] is True
+    for key in ("dead_rules", "orphan_kinds", "drift", "producers",
+                "consumers", "uncovered_ops"):
+        assert key in d
+
+
+# ------------------------------------------------------- synthetic defects
+
+def test_dead_rule_detected(tmp_path):
+    # consumes loopred, which this registry neither produces nor seeds
+    reg = _registry(
+        ("alive", ["dot"], [SHARD], [SHARD]),
+        ("dead", ["dot"], [LOOPRED], [SHARD]),
+    )
+    rep = check_registry(reg, rules_dir=tmp_path)
+    assert not rep.ok
+    assert [r["rule"] for r in rep.dead_rules] == ["dead"]
+
+
+def test_empty_consumes_is_alive(tmp_path):
+    # fire-on-any-change rules (congruence) must never read as dead
+    reg = _registry(("congruence", ["dot"], [], [DUP]))
+    rep = check_registry(reg, rules_dir=tmp_path)
+    assert not rep.dead_rules
+
+
+def test_orphan_kind_detected(tmp_path):
+    # slicegrp is produced but consumed by no rule, and it is not an
+    # output-check kind — deriving it is wasted work
+    reg = _registry(
+        ("producer", ["slice"], [SHARD], [SLICEGRP]),
+        ("user", ["dot"], [SHARD], [SHARD]),
+    )
+    rep = check_registry(reg, rules_dir=tmp_path)
+    assert SLICEGRP in rep.orphan_kinds and not rep.ok
+
+
+def test_seeded_kinds_not_orphans_when_output_checked(tmp_path):
+    # dup/shard are seeded + output-checked: a registry that only consumes
+    # them stays clean
+    reg = _registry(("elem", ["add"], [DUP, SHARD], [DUP, SHARD]))
+    rep = check_registry(reg, rules_dir=tmp_path)
+    assert rep.ok, rep.summary()
+
+
+def test_unproduced_consumed_detected(tmp_path):
+    # slicegrp consumed but neither produced nor seeded
+    reg = _registry(("reader", ["concat"], [SLICEGRP, SHARD], [SHARD]))
+    rep = check_registry(reg, rules_dir=tmp_path)
+    assert SLICEGRP in rep.unproduced_consumed and not rep.ok
+
+
+def test_drift_detected_from_module_source(tmp_path):
+    # a family module whose source builds Fact(SLICEGRP, ...) and reads
+    # LOOPRED, while its registered rule declares neither
+    (tmp_path / "sliceops.py").write_text(
+        "def rule_slice(prop, node):\n"
+        "    prop.emit(Fact(SLICEGRP, 0, 0, 2, lay))\n"
+        "    for f in prop.store.facts_kind(0, LOOPRED):\n"
+        "        pass\n")
+    reg = RuleRegistry()
+
+    def rule_slice(prop, node):
+        return None
+
+    rule_slice.__module__ = "tests.synthetic.sliceops"
+    reg.rule("slice_rule", ["slice"], consumes=[SHARD],
+             produces=[SHARD])(rule_slice)
+    rep = check_registry(reg, rules_dir=tmp_path)
+    directions = {(d["kind"], d["direction"]) for d in rep.drift}
+    assert (SLICEGRP, "produces") in directions, rep.summary()
+    assert (LOOPRED, "consumes") in directions, rep.summary()
+    assert not rep.ok
+
+
+def test_declared_usage_is_not_drift(tmp_path):
+    # same source, but the rule declares what the source does: clean
+    (tmp_path / "sliceops.py").write_text(
+        "def rule_slice(prop, node):\n"
+        "    prop.emit(Fact(SLICEGRP, 0, 0, 2, lay))\n")
+    reg = RuleRegistry()
+
+    def rule_slice(prop, node):
+        return None
+
+    rule_slice.__module__ = "tests.synthetic.sliceops"
+    reg.rule("slice_rule", ["slice"], consumes=[SHARD],
+             produces=[SHARD, SLICEGRP])(rule_slice)
+    rep = check_registry(reg, rules_dir=tmp_path)
+    assert not rep.drift, rep.summary()
+
+
+# ------------------------------------------------------------ CLI verb
+
+def test_cli_rulecheck_exit0(tmp_path, capsys):
+    from repro.verify.cli import main as cli_main
+
+    out = tmp_path / "rc.json"
+    assert cli_main(["rulecheck", "--json", str(out)]) == 0
+    d = json.loads(out.read_text())
+    assert d["ok"] and d["num_rules"] == len(DEFAULT_REGISTRY.rules)
+
+
+def test_cli_rulecheck_usage_error():
+    from repro.verify.cli import main as cli_main
+
+    assert cli_main(["rulecheck", "--ops-from", "nope"]) == 2

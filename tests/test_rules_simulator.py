@@ -58,8 +58,8 @@ def eval_graph(g: Graph, leaf_vals: dict, rank=None, axis_size=C):
         elif n.op == "reduce_max":
             vals[n.id] = ins[0].max(axis=tuple(n.param("axes")))
         elif n.op == "slice":
-            sl = tuple(slice(s, l) for s, l in zip(n.param("start_indices"),
-                                                   n.param("limit_indices")))
+            sl = tuple(slice(s, lim) for s, lim in zip(n.param("start_indices"),
+                                                     n.param("limit_indices")))
             vals[n.id] = ins[0][sl]
         elif n.op == "dynamic_slice":
             starts = [int(s) for s in ins[1:]]
@@ -281,7 +281,6 @@ def test_gather_dims_sound(gdim_seed, tiled):
     t = gb.add("tanh", [x], (S, D), "float64")
     gb.mark_output(t)
     gdim = gdim_seed % 2
-    out_shape = (S, D * C) if gdim == 1 else (S * C, D) if tiled else None
     gd = Graph("dist")
     xd = gd.add("input", (), (S // C, D), "float64")
     if tiled:
@@ -332,10 +331,10 @@ def test_dp_gather_scatter_facts_sound():
     gd, (tbld, idsd, embd, zerod, scatd) = build(B // C)
 
     T = rng.standard_normal((V, D))
-    I = rng.integers(0, V, size=(B, S, 1))
-    base_vals = {tbl: T, ids: I, zero: np.zeros((V, D))}
+    idx = rng.integers(0, V, size=(B, S, 1))
+    base_vals = {tbl: T, ids: idx, zero: np.zeros((V, D))}
     dist_vals = [
-        {tbld: T, idsd: np.split(I, C, 0)[r], zerod: np.zeros((V, D))}
+        {tbld: T, idsd: np.split(idx, C, 0)[r], zerod: np.zeros((V, D))}
         for r in range(C)
     ]
     p = Propagator(gb, gd, C)
@@ -434,7 +433,6 @@ def test_orthogonal_collective_carries_facts():
     shard facts carry through to the matching baseline collective.  (The
     numpy simulator models a single axis, so this is the symbolic half; the
     numeric half is covered by the composite-scenario equivalence test.)"""
-    rng = np.random.default_rng(5)
     B, H = 8, 6
     params = {"reduce_op": "add", "axes": ("other",), "groups": "full"}
 
@@ -450,7 +448,6 @@ def test_orthogonal_collective_carries_facts():
     td = gd.add("tanh", [ard], (B // C, H), "float64")
     gd.mark_output(td)
 
-    X = rng.standard_normal((B, H))
     p = Propagator(gb, gd, C)  # verifying axis "model"
     p.register_shard(xb, xd, dim=0)
     p.run()

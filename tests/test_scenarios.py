@@ -183,7 +183,7 @@ def test_base_trace_shared_across_scenarios():
 
 def test_base_trace_share_preserves_verdict_and_facts():
     with Session() as s:
-        shared = s.verify(ARCH, Plan(tp=TP, layers=2))
+        s.verify(ARCH, Plan(tp=TP, layers=2))  # warm the shared base trace
         shared_sp = s.verify(ARCH, Plan(tp=TP, sp=True, layers=2))
     solo_sp = verify(ARCH, Plan(tp=TP, sp=True, layers=2))
     assert shared_sp.verified and solo_sp.verified
@@ -222,6 +222,7 @@ def test_pairs_shim_warns_and_matches_registry():
     from repro.verify.scenarios import round_layers
 
     cfg = round_layers(get_config(ARCH), 2)
+    pairs._warned.clear()  # once-per-process guard (see docs/API.md)
     with pytest.warns(DeprecationWarning):
         pair = pairs.tp_forward_pair(ARCH, cfg, TP, 1, 32)
     assert pair.size == TP and pair.axis == "model"

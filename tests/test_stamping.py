@@ -143,8 +143,8 @@ def test_concat_extension_uses_family_extent():
     w = g.add("input", (), (4, 4), "float32")  # unrelated concat operand
     outs = []
     h = x
-    for l in range(3):
-        h = g.add("tanh", [h], (4,), "float32", layer=l * S)
+    for li in range(3):
+        h = g.add("tanh", [h], (4,), "float32", layer=li * S)
         outs.append(h)
     rs = [g.add("reshape", [o], (1, 4), "float32", {"new_sizes": (1, 4)})
           for o in outs]
@@ -163,17 +163,17 @@ def test_stamp_falls_back_on_irregular_trace():
     S = LAYER_TAG_STRIDE
     g = Graph()
     x = g.add("input", (), (4,), "float32")
-    for l in range(3):
-        x = g.add("tanh", [x], (4,), "float32", layer=l * S)
-        if l == 2:  # period 2 has an extra node: lengths diverge
-            x = g.add("neg", [x], (4,), "float32", layer=l * S)
+    for li in range(3):
+        x = g.add("tanh", [x], (4,), "float32", layer=li * S)
+        if li == 2:  # period 2 has an extra node: lengths diverge
+            x = g.add("neg", [x], (4,), "float32", layer=li * S)
     g.mark_output(x)
     assert stamp_graph(g, 6, lambda t: t // S) is None
 
     # fewer traced periods than TRACE_PERIODS must also refuse
     g2 = Graph()
     x = g2.add("input", (), (4,), "float32")
-    for l in range(2):
-        x = g2.add("tanh", [x], (4,), "float32", layer=l * S)
+    for li in range(2):
+        x = g2.add("tanh", [x], (4,), "float32", layer=li * S)
     g2.mark_output(x)
     assert stamp_graph(g2, 6, lambda t: t // S) is None

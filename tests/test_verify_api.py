@@ -81,11 +81,13 @@ def test_session_warm_vs_cold():
 def test_session_verdict_matches_legacy_entry_point():
     """Acceptance: Session cold verdicts and fact counts are identical to
     the deprecated one-shots for TP-forward and TP-decode."""
+    from repro.core import modelverify
     from repro.core.modelverify import verify_decode_tp, verify_model_tp
 
     with Session() as s:
         fwd = s.verify(ARCH, Plan(tp=TP, layers=2))
         dec = s.verify(ARCH, Plan.decode(tp=TP, layers=2))
+    modelverify._warned.clear()  # once-per-process guard (see docs/API.md)
     with pytest.warns(DeprecationWarning):
         old_fwd = verify_model_tp(ARCH, tp=TP, n_layers=2)
     with pytest.warns(DeprecationWarning):
