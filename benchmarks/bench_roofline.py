@@ -45,6 +45,34 @@ def _verify_profile_rows() -> list[dict]:
     ]
 
 
+def _layout_compose_row() -> dict:
+    """Micro-bench for the layout-composition memo (core/bijection.py):
+    repeated reshape/transpose/compose chains over a small deterministic
+    layout pool — the access pattern localization produces when many layer
+    pairs share a handful of shard layouts."""
+    import time
+
+    from repro.core.bijection import Layout
+
+    shapes = [(4, 8, 16), (8, 8, 8), (2, 16, 16), (16, 4, 8)]
+    reshapes = [(32, 16), (8, 64), (4, 128), (64, 8)]
+    axes = [(1, 0, 2), (2, 1, 0), (0, 2, 1)]
+    reps, calls = 50, 0
+    t0 = time.perf_counter()
+    for _ in range(reps):
+        for i, shape in enumerate(shapes):
+            lay = Layout.identity(shape)
+            t = lay.then_transpose(axes[i % len(axes)])
+            r = t.then_reshape(reshapes[i % len(reshapes)])
+            r.compose(r.inverse())
+            calls += 3
+    elapsed = time.perf_counter() - t0
+    return {"name": "roofline_layout_compose",
+            "us_per_call": elapsed / calls * 1e6,
+            "derived": f"reps={reps} pool={len(shapes)} calls={calls} "
+                       f"total={elapsed*1e3:.1f}ms (memoized ops)"}
+
+
 def rows(mesh: str = "16x16", include_tagged: bool = False) -> list[dict]:
     out = []
     for f in sorted(ARTIFACTS.glob("*.json")):
@@ -59,6 +87,7 @@ def rows(mesh: str = "16x16", include_tagged: bool = False) -> list[dict]:
 
 def run() -> list[dict]:
     out = _verify_profile_rows()
+    out.append(_layout_compose_row())
     if not ARTIFACTS.exists():
         out.append({"name": "roofline_missing", "us_per_call": 0.0,
                     "derived": "run `python -m repro.launch.dryrun --all` first"})

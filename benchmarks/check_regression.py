@@ -43,6 +43,8 @@ GATED_ROWS = [
     "fig11c_layers_32",
     "fig12_partition_seq",
     "fig12_memo_stamp",
+    "fig12_disk_warm",
+    "roofline_layout_compose",
 ]
 
 TOLERANCE = 1.25          # >25% slower than baseline fails

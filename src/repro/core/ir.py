@@ -31,7 +31,8 @@ Op vocabulary (the verifier's rules are polymorphic over most of it):
 """
 from __future__ import annotations
 
-from dataclasses import dataclass
+import hashlib
+from dataclasses import dataclass, replace
 from typing import Any, Iterable, Iterator, Optional, Sequence
 
 # ---------------------------------------------------------------------------
@@ -56,13 +57,22 @@ COMMUTATIVE = frozenset({"add", "mul", "max", "min", "and", "or", "xor"})
 
 
 def _freeze(value: Any) -> Any:
-    """Recursively convert params to hashable canonical form."""
+    """Recursively convert params to hashable canonical form.
+
+    NaN floats (gather/pad fill values) are rewritten to one shared object:
+    ``nan != nan`` defeats tuple equality except through the per-element
+    identity shortcut, and ``hash(nan)`` is id-based on modern CPython —
+    only a canonical singleton keeps structurally identical nodes equal
+    (and equally hashed) across traces and across pickle round-trips (see
+    ``_CANON_NAN`` below)."""
     if isinstance(value, (list, tuple)):
         return tuple(_freeze(v) for v in value)
     if isinstance(value, dict):
         return tuple(sorted((k, _freeze(v)) for k, v in value.items()))
     if isinstance(value, set):
         return tuple(sorted(_freeze(v) for v in value))
+    if isinstance(value, float) and value != value:
+        return _CANON_NAN
     return value
 
 
@@ -96,6 +106,33 @@ class Node:
     def short(self) -> str:
         ins = ",".join(f"%{i}" for i in self.inputs)
         return f"%{self.id} = {self.op}({ins}) {self.dtype}{list(self.shape)}"
+
+
+# the single NaN object unpickled graphs share.  Rule matching compares
+# base vs dist params with tuple equality, which only treats NaN as equal
+# through its per-element identity shortcut; pickle does not memoize floats,
+# so every unpickled NaN (gather fill_value etc.) would be a distinct object
+# and structurally identical nodes would stop matching.  Rewriting every NaN
+# to this one object on load restores the in-process invariant.
+_CANON_NAN = float("nan")
+
+
+def _canon_nan_value(v):
+    if isinstance(v, float) and v != v:
+        return _CANON_NAN
+    if isinstance(v, tuple):
+        if not any(isinstance(x, (float, tuple)) for x in v):
+            return v  # fast path: nothing a NaN could hide in
+        fixed = tuple(_canon_nan_value(x) for x in v)
+        return v if all(a is b for a, b in zip(v, fixed)) else fixed
+    return v
+
+
+def _canon_nan_params(nodes: list) -> None:
+    for i, n in enumerate(nodes):
+        fixed = _canon_nan_value(n.params)
+        if fixed is not n.params:
+            nodes[i] = replace(n, params=fixed)
 
 
 class Graph:
@@ -152,6 +189,37 @@ class Graph:
 
     def __iter__(self) -> Iterator[Node]:
         return iter(self.nodes)
+
+    # -- serialization -----------------------------------------------------
+    # the consumer index is a derived cache: drop it from pickles (the disk
+    # store and the process shard backend both ship graphs) and rebuild on
+    # first use after load
+    def __getstate__(self) -> dict:
+        return {"name": self.name, "nodes": self.nodes,
+                "outputs": self.outputs, "stamp": self.stamp}
+
+    def __setstate__(self, state: dict) -> None:
+        self.name = state["name"]
+        self.nodes = state["nodes"]
+        self.outputs = state["outputs"]
+        self.stamp = state.get("stamp")
+        self._consumers = None
+        _canon_nan_params(self.nodes)
+
+    def stable_digest(self) -> str:
+        """Process-independent content hash of the full graph.
+
+        Unlike :meth:`fingerprint` (Python ``hash()``, randomized per
+        process by PYTHONHASHSEED), this sha256 digest is stable across
+        processes and runs — the persistent verification store uses it to
+        validate that a deserialized graph is byte-equivalent to the one
+        that was saved."""
+        h = hashlib.sha256()
+        h.update(repr(self.outputs).encode())
+        for n in self.nodes:
+            h.update(repr((n.op, n.inputs, n.shape, n.dtype, n.params,
+                           n.src, n.layer, n.scope)).encode())
+        return h.hexdigest()
 
     def consumer_index(self) -> dict[int, list[int]]:
         """Precomputed consumer adjacency (node id -> consumer node ids).
@@ -263,3 +331,95 @@ class Graph:
             lines.append(f"  ... {len(self.nodes) - max_nodes} more")
         lines.append(f"  outputs: {self.outputs}")
         return "\n".join(lines)
+
+
+# ---------------------------------------------------------------------------
+# bounded structural diff (delta re-verification)
+
+
+@dataclass(frozen=True)
+class GraphDelta:
+    """Alignment between an old graph and an edited new graph.
+
+    Old node ids below ``prefix`` map to themselves, ids at or above
+    ``old_end`` map shifted by ``shift`` (insertion/deletion renumbers the
+    tail), and ids inside ``[prefix, old_end)`` — a deleted block — map to
+    nothing.  ``changed`` lists new-graph ids that have no content-identical
+    counterpart in the old graph: inserted nodes plus any surviving node
+    whose fields or (mapped) inputs differ — e.g. consumers rewired onto the
+    edit.  Delta re-verification must rework those from scratch; everything
+    else keeps its cached layer templates."""
+
+    changed: tuple[int, ...]
+    prefix: int
+    old_end: int
+    shift: int
+
+    def map_old(self, nid: int) -> Optional[int]:
+        if nid < self.prefix:
+            return nid
+        if nid >= self.old_end:
+            return nid + self.shift
+        return None
+
+
+def _same_node(a: Node, b: Node, inputs: tuple) -> bool:
+    """Field equality modulo absolute id, with ``a``'s inputs pre-mapped."""
+    return (a.op == b.op and inputs == b.inputs and a.shape == b.shape
+            and a.dtype == b.dtype and a.params == b.params
+            and a.src == b.src and a.layer == b.layer and a.scope == b.scope)
+
+
+def diff_graphs(old: Graph, new: Graph,
+                max_changed: int = 96) -> Optional[GraphDelta]:
+    """Align ``new`` against ``old`` when they differ in a bounded node set.
+
+    Handles the two edit shapes bug injection / single-op edits produce:
+    in-place field edits (same length — possibly several scattered sites)
+    and one contiguous block inserted or deleted at the first divergence
+    point (ids after it shift).  Surgery that rewires consumer inputs onto
+    the edit — every injector that splices a node in or drops one does —
+    marks those consumers changed too, so ``changed`` is closed over every
+    node whose content differs.  Returns ``None`` when no alignment with at
+    most ``max_changed`` changed nodes exists — callers must then fall back
+    to a full re-verification (sound: a failed diff never produces a wrong
+    verdict, only a slower run)."""
+    no, nn = len(old.nodes), len(new.nodes)
+    shift = nn - no
+    if abs(shift) > max_changed:
+        return None
+    if shift == 0:
+        changed = tuple(n.id for n, m in zip(old.nodes, new.nodes) if n != m)
+        if len(changed) > max_changed:
+            return None
+        return GraphDelta(changed, no, no, 0)
+    # One block inserted (shift > 0) or deleted (shift < 0) at the first
+    # divergence point p; every surviving old node j then sits at j + shift.
+    # Validate that interpretation node-by-node: a survivor whose fields or
+    # mapped inputs disagree is marked changed rather than failing the
+    # alignment (the id correspondence still holds — only its content was
+    # rewritten, e.g. an input rewired onto the spliced block).
+    p = 0
+    lim = min(no, nn)
+    while p < lim and old.nodes[p] == new.nodes[p]:
+        p += 1
+    old_end = p if shift > 0 else p - shift
+    if old_end > no:
+        return None
+    changed = set(range(p, p + max(shift, 0)))  # inserted block, new ids
+
+    def mapped(q: int) -> Optional[int]:
+        if q < p:
+            return q
+        if q >= old_end:
+            return q + shift
+        return None
+
+    for j in range(old_end, no):
+        a, b = old.nodes[j], new.nodes[j + shift]
+        ins = tuple(mapped(q) for q in a.inputs)
+        if None in ins or not _same_node(a, b, ins):
+            changed.add(j + shift)
+            if len(changed) > max_changed:
+                return None
+    return GraphDelta(tuple(sorted(changed)), p, old_end, shift)

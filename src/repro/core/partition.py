@@ -130,6 +130,52 @@ class TemplateCache:
     struct: dict = field(default_factory=dict)
 
 
+def delta_template_cache(cache: TemplateCache, delta, old_dist: Graph,
+                         dist: Graph) -> TemplateCache:
+    """Template-cache view for *delta re-verification* of a mutated graph.
+
+    ``cache`` is the clean pair's TemplateCache, ``delta`` a
+    :class:`~repro.core.ir.GraphDelta` from ``old_dist`` (the clean dist
+    graph) to ``dist`` (the mutated one — ``delta.changed`` ids live in its
+    id space).  The returned cache is safe to use verbatim on the mutated
+    pair:
+
+    * ``memo`` entries are **content-addressed positional templates** —
+      keyed on normalized structural fingerprints + input-fact signatures,
+      replayed by zipping source ids onto the target plan's nodes — so
+      they carry over as-is (a changed layer's recomputed fingerprint can
+      never match a clean entry; an unchanged layer's replay is exactly
+      the from-scratch derivation).  A dict copy keeps new entries derived
+      from the mutated graph out of the clean cache.
+    * ``struct`` entries are keyed on plan keys and store node-id lists in
+      the clean graph's id space: entries for layers overlapping the
+      changed region — in *either* id space, so a pure deletion (whose
+      ``changed`` set in the new space may miss the vanished node itself)
+      still invalidates the layer it was deleted from — are dropped (their
+      fingerprints must be recomputed) and surviving dist ext-input ids are
+      remapped through the delta.
+    * ``tpl`` is cleared: stamped-clone shortcuts assume the stamp
+      metadata matches the graph, and mutated graphs run unstamped.
+    """
+    changed = set(delta.changed)
+    bad = {k for k, nids in split_layer_buckets(dist).items()
+           if not changed.isdisjoint(nids)}
+    deleted = set(range(delta.prefix, delta.old_end))
+    if deleted:
+        bad |= {k for k, nids in split_layer_buckets(old_dist).items()
+                if not deleted.isdisjoint(nids)}
+    struct = {}
+    for k, v in cache.struct.items():
+        if k in bad:
+            continue
+        b_fp, d_fp, sdelta, bext, dext = v
+        nd = [delta.map_old(e) for e in dext]
+        if any(e is None for e in nd):
+            continue  # ext input fell inside the edited region
+        struct[k] = (b_fp, d_fp, sdelta, bext, nd)
+    return TemplateCache(memo=dict(cache.memo), tpl={}, struct=struct)
+
+
 class PartitionedVerifier:
     """Runs Algorithm 1: per-layer-pair registration, staged parallel
     rewriting, memoized replay for repeated layers."""

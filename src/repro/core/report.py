@@ -194,6 +194,12 @@ class CacheStats:
     memo_hits: int = 0
     facts_replayed: int = 0
     settled_nodes: int = 0
+    # persistent-store surface (repro.verify.store): the graph pair and its
+    # layer templates were served from the on-disk cache (a fresh process
+    # warm start), and — for mutated re-verifies — the number of changed
+    # nodes the delta path rewrote instead of re-running the full fixpoint
+    disk_warm: bool = False
+    delta_nodes: int = 0
 
     @classmethod
     def from_memo(cls, memo: Optional[MemoStats],
@@ -275,6 +281,28 @@ class Report:
             if b.repair:
                 lines.append(f"        suggested repair bijection: {b.repair}")
         return "\n".join(lines)
+
+    def canonical(self) -> dict:
+        """The verdict surface: :meth:`to_json` minus wall-clock, cache
+        provenance and derivation-effort counters.  Cold, warm, disk-warm
+        and delta runs of the same pair all compare equal here byte-for-byte
+        (the CI warm-start smoke and the store tests assert exactly that) —
+        fields that depend on HOW the fixpoint was reached are stripped:
+        ``num_facts``/``rule_invocations``/``memo`` (memo replay skips the
+        failed rule attempts a cold run counts), and ``diagnostics``
+        (failed-attempt evidence collected only while rules fire; the bug
+        sites distilled from them are kept)."""
+        d = json.loads(self.to_json())
+        for k in ("elapsed_s", "timings", "cache", "num_facts",
+                  "rule_invocations", "memo", "diagnostics"):
+            d.pop(k, None)
+        d["scenarios"] = [
+            {k: v for k, v in row.items()
+             if k not in ("elapsed_s", "trace_cached", "base_trace_cached",
+                          "fp_cached", "disk_warm", "num_facts")}
+            for row in d.get("scenarios", [])
+        ]
+        return d
 
     # ------------------------------------------------------------- JSON
     def to_json(self, indent: Optional[int] = None) -> str:

@@ -150,10 +150,16 @@ class _ShardStore:
 
 class WorklistEngine:
     def __init__(self, prop, workers: int = 0, pool=None,
-                 backend: str = "thread") -> None:
+                 backend: str = "thread", cone_cap: int = 64,
+                 min_offload: int = 64, per_worker: int = 3) -> None:
         self.prop = prop
         self.workers = int(workers or 0)
         self.backend = backend
+        # process-backend chunk-planning caps (VerifyOptions.chunk_*);
+        # consumed by ProcessOffload / plan_chunks
+        self.cone_cap = int(cone_cap)
+        self.min_offload = int(min_offload)
+        self.per_worker = int(per_worker)
         self._ext_pool = pool  # session-owned: survives close()
         self._own_pool = None  # engine-owned: shut down by close()
         self._offload = None  # ProcessOffload when the process backend runs

@@ -118,16 +118,21 @@ def _eval_chunk(token, payload: Optional[bytes], nids: list,
 # parent side
 
 
-def plan_chunks(dist: Graph, workers: int) -> list[list[int]]:
+def plan_chunks(dist: Graph, workers: int, *, cone_cap: int = _CONE_CAP,
+                min_offload: int = _MIN_OFFLOAD_NODES,
+                per_worker: int = 3) -> list[list[int]]:
     """Pack the graph's small-cone components into per-worker chunks.
 
     Returns chunk node-id lists (each topologically sorted), ordered by
     first node id so chunk completion roughly tracks the parent's own
     front-to-back layer order.  Leaves are excluded — the parent dispatches
-    them up front so every chunk's external inputs already carry facts."""
+    them up front so every chunk's external inputs already carry facts.
+    The caps default to the module constants but are normally threaded in
+    from ``VerifyOptions.chunk_cone_cap`` / ``chunk_min_offload`` /
+    ``chunks_per_worker`` via the engine."""
     cone: dict[int, int] = {}
     region: list[int] = []
-    big = _CONE_CAP + 1
+    big = cone_cap + 1
     for n in dist:
         if not n.inputs:
             cone[n.id] = 0  # leaf: free connector, dispatched by the parent
@@ -135,13 +140,13 @@ def plan_chunks(dist: Graph, workers: int) -> list[list[int]]:
         c = 1
         for i in n.inputs:
             c += cone.get(i, big)
-            if c > _CONE_CAP:
+            if c > cone_cap:
                 c = big
                 break
         cone[n.id] = c
-        if c <= _CONE_CAP:
+        if c <= cone_cap:
             region.append(n.id)
-    if len(region) < _MIN_OFFLOAD_NODES:
+    if len(region) < min_offload:
         return []
     # union-find components over region-internal edges (leaves are shared
     # connectors, not edges: two weight chains touching the same parameter
@@ -164,8 +169,10 @@ def plan_chunks(dist: Graph, workers: int) -> list[list[int]]:
     comps: dict[int, list[int]] = {}
     for nid in region:  # region is id-ordered -> components stay sorted
         comps.setdefault(find(nid), []).append(nid)
-    # pack components into ~3 chunks per worker (pipelining granularity)
-    target = max(1, (len(region) + 3 * workers - 1) // (3 * workers))
+    # pack components into ~per_worker chunks per worker (pipelining
+    # granularity)
+    target = max(1, (len(region) + per_worker * workers - 1)
+                 // (per_worker * workers))
     chunks: list[list[int]] = []
     cur: list[int] = []
     for comp in sorted(comps.values(), key=lambda c: c[0]):
@@ -187,7 +194,11 @@ class ProcessOffload:
         prop = engine.prop
         self._prop = prop
         dist = prop.dist
-        self.chunks = plan_chunks(dist, max(2, engine.workers))
+        self.chunks = plan_chunks(
+            dist, max(2, engine.workers),
+            cone_cap=getattr(engine, "cone_cap", _CONE_CAP),
+            min_offload=getattr(engine, "min_offload", _MIN_OFFLOAD_NODES),
+            per_worker=getattr(engine, "per_worker", 3))
         self.offloaded: set[int] = {n for c in self.chunks for n in c}
         self._tasks: list = []  # (future, chunk_index)
         # finished-but-unmerged results: facts/diagnostics buffer here until

@@ -76,6 +76,18 @@ class VerifyOptions:
     # (RuleProfiler); off by default — it wraps every rule firing in
     # monotonic clock reads
     profile: bool = False
+    # process-backend chunk planning (repro.core.rules.parshard): max nodes
+    # absorbed into one chunk's input cone, minimum offloadable region size,
+    # and the chunks-per-worker target the planner sizes chunks against
+    chunk_cone_cap: int = 64
+    chunk_min_offload: int = 64
+    chunks_per_worker: int = 3
+    # delta re-verification (repro.verify.Session): when a mutated graph
+    # differs from the cached clean pair in at most ``delta_max_nodes``
+    # nodes, re-verify with a delta-derived template cache (changed layers
+    # invalidated, the rest replayed) instead of from scratch
+    delta: bool = True
+    delta_max_nodes: int = 96
 
 
 def resolve_backend(options: "VerifyOptions") -> str:
@@ -302,7 +314,10 @@ def verify_graphs(
 
         prop.profiler = RuleProfiler()
     engine = (WorklistEngine(prop, workers=options.parallel_workers,
-                             pool=pool, backend=backend)
+                             pool=pool, backend=backend,
+                             cone_cap=options.chunk_cone_cap,
+                             min_offload=options.chunk_min_offload,
+                             per_worker=options.chunks_per_worker)
               if options.engine == "worklist" else None)
     for f in input_facts:
         b, d = base_inputs[f.base_index], dist_inputs[f.dist_index]

@@ -444,13 +444,17 @@ def run_campaign(
     fuzz_seeds: tuple = (),
     options: Optional[VerifyOptions] = None,
     session: Optional[Session] = None,
+    cache_dir: Optional[str] = None,
 ) -> CampaignReport:
     """Sweep the detection matrix and return the :class:`CampaignReport`.
 
     ``scenarios``/``injectors`` select subsets by name (unknown names raise
     :class:`PlanError` / :class:`InjectorError` — the CLI maps both to exit
     code 2); ``fuzz_seeds`` adds one clean + one injected fuzz cell per
-    seed.  ``session`` lets callers reuse an existing warm Session."""
+    seed.  ``session`` lets callers reuse an existing warm Session;
+    ``cache_dir`` gives the campaign's own Session a persistent warm-start
+    store (clean pairs survive across campaign runs — ignored when an
+    external ``session`` is passed)."""
     scens = campaign_scenarios(scenarios)
     inj_specs = (DEFAULT_INJECTORS.specs() if injectors is None
                  else [DEFAULT_INJECTORS.get(n) for n in injectors])
@@ -463,7 +467,7 @@ def run_campaign(
         injectors=[s.name for s in inj_specs])
     t0 = time.perf_counter()
     own = session is None
-    session = session or Session(options=options)
+    session = session or Session(options=options, cache_dir=cache_dir)
     try:
         for arch in archs:
             cfg = get_config(arch)

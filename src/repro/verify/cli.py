@@ -99,6 +99,15 @@ def build_parser() -> argparse.ArgumentParser:
                          "report (timings.profile) and print the top rules")
     ap.add_argument("--no-stamp", action="store_true",
                     help="disable layer stamping (full trace)")
+    ap.add_argument("--cache-dir", metavar="DIR", default=None,
+                    help="persistent warm-start cache directory "
+                         "(repro.verify.store): traced pairs and per-layer "
+                         "templates survive the process, so a fresh run of "
+                         "a previously-seen (arch, plan) skips jax tracing "
+                         "and memo-replays every layer. Defaults to "
+                         "$REPRO_CACHE_DIR when set")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="ignore --cache-dir / $REPRO_CACHE_DIR (cold run)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write the machine-readable report ('-' = stdout)")
     ap.add_argument("--inject", metavar="INJECTOR[:INDEX]", default=None,
@@ -205,10 +214,25 @@ def build_campaign_parser() -> argparse.ArgumentParser:
     ap.add_argument("--engine", choices=("worklist", "passes"),
                     default="worklist")
     ap.add_argument("--no-stamp", action="store_true")
+    ap.add_argument("--cache-dir", metavar="DIR", default=None,
+                    help="persistent warm-start cache shared by the "
+                         "campaign's cells (clean pairs trace once per "
+                         "scenario and survive across campaign runs). "
+                         "Defaults to $REPRO_CACHE_DIR when set")
+    ap.add_argument("--no-cache", action="store_true",
+                    help="ignore --cache-dir / $REPRO_CACHE_DIR (cold run)")
     ap.add_argument("--json", metavar="PATH", default=None,
                     help="write the detection-matrix report ('-' = stdout)")
     ap.add_argument("--quiet", action="store_true")
     return ap
+
+
+def _cache_dir_of(args) -> Optional[str]:
+    import os
+
+    if args.no_cache:
+        return None
+    return args.cache_dir or os.environ.get("REPRO_CACHE_DIR") or None
 
 
 def campaign_main(argv: Optional[list] = None) -> int:
@@ -238,7 +262,7 @@ def campaign_main(argv: Optional[list] = None) -> int:
             [] if args.fuzz_only else archs,
             tp=args.tp, dp=args.dp, layers=args.layers, seq=args.seq,
             scenarios=scenarios, injectors=injectors, fuzz_seeds=seeds,
-            options=options)
+            options=options, cache_dir=_cache_dir_of(args))
     except (PlanError, InjectorError) as e:
         print(f"error: {e}", file=sys.stderr)
         return EXIT_USAGE
@@ -444,7 +468,8 @@ def main(argv: Optional[list] = None) -> int:
                             profile=args.profile,
                             stamp=not args.no_stamp)
     try:
-        with Session(options=options) as session:
+        with Session(options=options,
+                     cache_dir=_cache_dir_of(args)) as session:
             report = session.verify(args.arch, plan, mutate_dist=mutate,
                                     lint=args.lint)
     except PlanError as e:

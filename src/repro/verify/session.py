@@ -29,13 +29,15 @@ from dataclasses import replace
 from typing import Optional
 
 from repro.configs import get_config
-from repro.core.partition import TemplateCache
+from repro.core.ir import diff_graphs
+from repro.core.partition import TemplateCache, delta_template_cache
 from repro.core.report import (CacheStats, PhaseTimings, Report, RuleProfiler,
                                rank_bug_sites)
 from repro.core.verifier import VerifyOptions, resolve_backend, verify_graphs
 
 from .plan import Plan, Scenario
 from .scenarios import GraphPair, build_pair
+from .store import DiskCache
 
 __all__ = ["Session", "verify"]
 
@@ -55,8 +57,14 @@ class Session:
     (True, True)
     """
 
-    def __init__(self, *, options: Optional[VerifyOptions] = None):
+    def __init__(self, *, options: Optional[VerifyOptions] = None,
+                 cache_dir: Optional[str] = None):
         self.options = options
+        # persistent warm-start store (repro.verify.store): traced pairs +
+        # template caches survive the process; None = in-memory only
+        self._store: Optional[DiskCache] = (
+            DiskCache(cache_dir) if cache_dir else None)
+        self._persisted: set[tuple] = set()  # keys already on disk
         self._graphs: dict[tuple, GraphPair] = {}
         self._templates: dict[tuple, TemplateCache] = {}
         # base (single-device) traces shared ACROSS scenarios: keyed on
@@ -96,12 +104,17 @@ class Session:
         self._base_traces.clear()
 
     def stats(self) -> dict:
-        return {
+        out = {
             "cached_graphs": len(self._graphs),
             "cached_templates": len(self._templates),
             "cached_base_traces": len(self._base_traces),
             "pool_workers": self._pool_size,
         }
+        if self._store is not None:
+            out["disk"] = {"hits": self._store.hits,
+                           "misses": self._store.misses,
+                           "saves": self._store.saves}
+        return out
 
     def _get_pool(self, options: VerifyOptions):
         """The session pool matching the options' resolved backend."""
@@ -172,16 +185,28 @@ class Session:
         key = (arch, cfg_h, scen.name, scen.size, plan.layers, plan.batch,
                plan.seq, plan.max_len, plan.stages, plan.tp, options.stamp)
         cacheable = mutate_dist is None or mutate_pure
-        cached = key in self._graphs and cacheable
-        if cached:
-            pair = self._graphs[key]
-        else:
+        disk_warm = False
+        pair = self._graphs.get(key) if cacheable else None
+        if pair is None and cacheable and self._store is not None:
+            hit = self._store.load(key)
+            if hit is not None:
+                # disk warm start: the traced pair AND its template cache
+                # come back from a previous process — no jax trace, and the
+                # verify below memo-replays every layer
+                pair, tpls = hit
+                self._graphs[key] = pair
+                self._templates[key] = tpls
+                self._persisted.add(key)
+                disk_warm = True
+        cached = pair is not None
+        if pair is None:
             pair = build_pair(arch, plan, scen, stamp=options.stamp,
                               base_cache=self._base_traces,
                               base_key=(arch, cfg_h))
             if cacheable:
                 self._graphs[key] = pair
         dist = pair.dist
+        delta_nodes = 0
         if mutate_dist is not None:
             dist = mutate_dist(dist)
             # a pure identity mutation (hook returned the input unchanged)
@@ -191,6 +216,23 @@ class Session:
             if not (mutate_pure and dist is pair.dist):
                 dist.stamp = None
             cache = None  # templates belong to the unmutated pair
+            # delta re-verification: when the mutated graph differs from the
+            # cached clean one in a bounded node set, verify with a
+            # delta-derived template view — unchanged layers memo-replay,
+            # only the edited layers (and fact-changed downstream) rewrite.
+            # Verdict/fact-set parity with a from-scratch run holds because
+            # memo entries are content-addressed (a changed layer's
+            # fingerprint can never hit a clean entry).
+            if (dist is not pair.dist and options.delta
+                    and options.partition and options.memoize):
+                clean = self._templates.get(key)
+                if clean is not None and clean.memo:
+                    delta = diff_graphs(pair.dist, dist,
+                                        max_changed=options.delta_max_nodes)
+                    if delta is not None:
+                        cache = delta_template_cache(
+                            clean, delta, pair.dist, dist)
+                        delta_nodes = len(delta.changed)
         else:
             cache = self._templates.setdefault(key, TemplateCache())
         timings = PhaseTimings(
@@ -211,6 +253,14 @@ class Session:
         )
         rep.cache.trace_cached = cached
         rep.cache.base_trace_cached = pair.base_cached
+        rep.cache.disk_warm = disk_warm
+        rep.cache.delta_nodes = delta_nodes
+        if (self._store is not None and mutate_dist is None
+                and key not in self._persisted):
+            # persist after a clean verify: the templates were just filled
+            # (or refreshed) by the run above
+            if self._store.save(key, pair, self._templates[key]):
+                self._persisted.add(key)
         if lint:
             rep.lint = _lint_pair(arch, pair, dist).to_dict()
         return rep
@@ -267,6 +317,7 @@ def _merge(arch: str, plan: Plan, results) -> Report:
             "trace_cached": rep.cache.trace_cached,
             "base_trace_cached": rep.cache.base_trace_cached,
             "fp_cached": rep.cache.fp_cached,
+            "disk_warm": rep.cache.disk_warm,
             "lint_ok": rep.lint.get("ok") if rep.lint is not None else None,
         }
         for scen, rep in results
@@ -304,6 +355,8 @@ def _merge(arch: str, plan: Plan, results) -> Report:
                 memo_hits=sum(r.cache.memo_hits for r in reps),
                 facts_replayed=sum(r.cache.facts_replayed for r in reps),
                 settled_nodes=sum(r.cache.settled_nodes for r in reps),
+                disk_warm=all(r.cache.disk_warm for r in reps),
+                delta_nodes=sum(r.cache.delta_nodes for r in reps),
             ),
         )
         lints = [r.lint for r in reps if r.lint is not None]

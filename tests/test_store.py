@@ -1,0 +1,256 @@
+"""Persistent warm-start store + delta re-verification contracts.
+
+The store's one promise is *cold-fallback soundness*: a hit replays the
+exact traced pair + templates, and ANY mismatch — schema bump, rules-hash
+drift, truncated file, flipped byte — degrades to a cold verify, never a
+wrong verdict.  Delta re-verification's promise is *parity*: re-verifying
+a mutated graph through a clean session's diffed template cache must
+produce the same verdict, bug sites and canonical fact set as a
+from-scratch run, for every registered injector.
+"""
+import json
+import os
+import subprocess
+import sys
+
+import pytest
+
+from repro.core.inject import DEFAULT_INJECTORS
+from repro.core.ir import GraphDelta, diff_graphs
+from repro.core.verifier import VerifyOptions
+from repro.verify import Plan, Session
+from repro.verify.scenarios import build_pair
+from repro.verify.store import DiskCache, rules_schema_hash
+
+ARCH = "qwen3_4b"
+PLAN = Plan(tp=4, layers=2, seq=32)
+
+
+def _canon(f):
+    lay = f.layout
+    lk = None if lay is None else (lay.atoms, lay.perm, lay.dst_groups)
+    return (f.kind, f.base, f.dist, f.size, lk, f.reduce_op, f.dim,
+            f.nchunk, f.index, f.idxset)
+
+
+def _verify_captured(session, **kw):
+    """session.verify + the canonical fact set of every Propagator built."""
+    import repro.core.verifier as V
+
+    captured = []
+    orig = V.Propagator
+
+    class _Capture(orig):
+        def __init__(self, *a, **kws):
+            super().__init__(*a, **kws)
+            captured.append(self)
+
+    V.Propagator = _Capture
+    try:
+        rep = session.verify(ARCH, PLAN, **kw)
+    finally:
+        V.Propagator = orig
+    facts = {_canon(f) for p in captured
+             for fl in p.store.by_dist.values() for f in fl}
+    return rep, facts
+
+
+# ---------------------------------------------------------------- round trip
+
+
+def test_disk_roundtrip_fresh_session(tmp_path):
+    cache = str(tmp_path / "vcache")
+    with Session(cache_dir=cache) as s:
+        cold = s.verify(ARCH, PLAN)
+    assert cold.verified and not cold.cache.disk_warm
+    assert s.stats()["disk"]["saves"] == 1
+    # fresh session, nothing carried over but the directory
+    with Session(cache_dir=cache) as s2:
+        warm = s2.verify(ARCH, PLAN)
+    assert warm.verified and warm.cache.disk_warm
+    assert s2.stats()["disk"] == {"hits": 1, "misses": 0, "saves": 0}
+    assert cold.canonical() == warm.canonical()
+
+
+def test_disk_roundtrip_fresh_process(tmp_path):
+    """The real contract: a different PYTHONHASHSEED, a different process."""
+    cache = str(tmp_path / "vcache")
+    src = os.path.join(os.path.dirname(__file__), os.pardir, "src")
+    prog = (
+        "import json, sys\n"
+        "from repro.verify import Plan, Session\n"
+        f"s = Session(cache_dir={cache!r})\n"
+        f"rep = s.verify({ARCH!r}, Plan(tp=4, layers=2, seq=32))\n"
+        "print(json.dumps({'verified': rep.verified,"
+        " 'disk_warm': rep.cache.disk_warm,"
+        " 'canonical': rep.canonical()}))\n"
+    )
+
+    def run(seed):
+        env = dict(os.environ, PYTHONPATH=src, PYTHONHASHSEED=seed,
+                   JAX_PLATFORMS="cpu")
+        out = subprocess.run([sys.executable, "-c", prog], env=env,
+                             capture_output=True, text=True, check=True)
+        return json.loads(out.stdout.splitlines()[-1])
+
+    a, b = run("1"), run("2")
+    assert a["verified"] and not a["disk_warm"]
+    assert b["verified"] and b["disk_warm"]
+    assert a["canonical"] == b["canonical"]
+
+
+# ------------------------------------------------------------- cold fallback
+
+
+def _populated(tmp_path):
+    cache = str(tmp_path / "vcache")
+    with Session(cache_dir=cache) as s:
+        assert s.verify(ARCH, PLAN).verified
+    return cache
+
+
+def test_rules_hash_mismatch_falls_back_cold(tmp_path, monkeypatch):
+    cache = _populated(tmp_path)
+    # a rule-registry change shifts the content address: old entries are
+    # simply never found
+    import repro.verify.store as store_mod
+    monkeypatch.setattr(store_mod, "_rules_hash", "deadbeef" * 8)
+    assert rules_schema_hash() == "deadbeef" * 8
+    with Session(cache_dir=cache) as s:
+        rep = s.verify(ARCH, PLAN)
+    assert rep.verified and not rep.cache.disk_warm
+    assert s.stats()["disk"]["misses"] >= 1
+
+
+def test_schema_bump_falls_back_cold(tmp_path, monkeypatch):
+    cache = _populated(tmp_path)
+    import repro.verify.store as store_mod
+    monkeypatch.setattr(store_mod, "STORE_SCHEMA_VERSION", 999)
+    monkeypatch.setattr(store_mod, "_rules_hash", None)  # recompute
+    with Session(cache_dir=cache) as s:
+        rep = s.verify(ARCH, PLAN)
+    assert rep.verified and not rep.cache.disk_warm
+
+
+@pytest.mark.parametrize("damage", ["truncate", "flip", "garbage", "empty"])
+def test_corrupted_entry_tolerated(tmp_path, damage):
+    cache = _populated(tmp_path)
+    (entry,) = [os.path.join(cache, f) for f in os.listdir(cache)]
+    raw = open(entry, "rb").read()
+    if damage == "truncate":
+        raw = raw[: len(raw) // 2]
+    elif damage == "flip":
+        raw = raw[:50] + bytes([raw[50] ^ 0xFF]) + raw[51:]
+    elif damage == "garbage":
+        raw = b"not a cache entry"
+    else:
+        raw = b""
+    open(entry, "wb").write(raw)
+    with Session(cache_dir=cache) as s:
+        rep = s.verify(ARCH, PLAN)
+    assert rep.verified and not rep.cache.disk_warm
+    assert s.stats()["disk"]["misses"] == 1
+
+
+def test_unwritable_payload_returns_false(tmp_path):
+    store = DiskCache(str(tmp_path / "vcache"))
+    assert store.save(("k",), object(), lambda: None) is False  # unpicklable
+    assert store.load(("k",)) is None
+    assert store.saves == 0
+
+
+# ------------------------------------------------------------- diff_graphs
+
+
+def _tp_pair():
+    return build_pair(ARCH, PLAN, PLAN.scenarios()[0], stamp=False)
+
+
+def test_diff_identity_and_inplace_edit():
+    pair = _tp_pair()
+    g = pair.dist
+    d = diff_graphs(g, g)
+    assert d == GraphDelta((), len(g.nodes), len(g.nodes), 0)
+    assert d.map_old(0) == 0 and d.map_old(len(g.nodes) - 1) == len(g.nodes) - 1
+
+
+@pytest.mark.parametrize("name", DEFAULT_INJECTORS.names())
+def test_diff_covers_every_injector_surgery(name):
+    pair = _tp_pair()
+    spec = DEFAULT_INJECTORS.get(name)
+    inj = spec(pair.dist)
+    if inj is None:
+        pytest.skip(f"{name}: no applicable site in tp-forward")
+    mut = inj.graph
+    delta = diff_graphs(pair.dist, mut)
+    assert delta is not None, f"{name}: bounded surgery must diff"
+    assert delta.changed, f"{name}: surgery must mark changed nodes"
+    shift = len(mut.nodes) - len(pair.dist.nodes)
+    assert delta.shift == shift
+    # alignment soundness: every new node outside `changed` is
+    # field-identical to its mapped old node
+    changed = set(delta.changed)
+    imaged = {}
+    for old_id in range(len(pair.dist.nodes)):
+        nid = delta.map_old(old_id)
+        if nid is not None:
+            imaged[nid] = old_id
+    for new_id, node in enumerate(mut.nodes):
+        if new_id in changed:
+            continue
+        old = pair.dist.nodes[imaged[new_id]]
+        assert (old.op, old.shape, old.dtype, old.params) == (
+            node.op, node.shape, node.dtype, node.params), (name, new_id)
+
+
+def test_diff_rejects_oversized_edit():
+    from repro.core.ir import Graph
+
+    g = _tp_pair().dist
+    t = Graph(g.name)
+    t.nodes = g.nodes[:10]
+    t.outputs = [9]
+    assert diff_graphs(g, t, max_changed=4) is None
+
+
+# ------------------------------------------------------- delta re-verify
+
+
+@pytest.mark.parametrize("name", DEFAULT_INJECTORS.names())
+def test_delta_reverify_parity_per_injector(name):
+    spec = DEFAULT_INJECTORS.get(name)
+
+    def mut(g):
+        inj = spec(g)
+        return g if inj is None else inj.graph
+
+    # delta path: clean verify warms the session, the mutated run diffs
+    with Session(options=VerifyOptions()) as s:
+        clean = s.verify(ARCH, PLAN)
+        assert clean.verified
+        rep_d, facts_d = _verify_captured(s, mutate_dist=mut,
+                                          mutate_pure=True)
+    # from-scratch: a fresh session goes straight to the mutated run
+    with Session(options=VerifyOptions(delta=False)) as s2:
+        rep_f, facts_f = _verify_captured(s2, mutate_dist=mut,
+                                          mutate_pure=True)
+    assert rep_d.verified == rep_f.verified
+    sites_d = {(b.src, b.category) for b in rep_d.bug_sites}
+    sites_f = {(b.src, b.category) for b in rep_f.bug_sites}
+    assert sites_d == sites_f, name
+    assert facts_d == facts_f, f"{name}: delta fact set diverged"
+    if not rep_f.verified:  # injector had an applicable site
+        assert rep_d.cache.delta_nodes > 0, f"{name}: delta path must engage"
+
+
+def test_delta_disabled_still_sound():
+    spec = DEFAULT_INJECTORS.get("drop_all_reduce")
+
+    def mut(g):
+        inj = spec(g)
+        return g if inj is None else inj.graph
+
+    with Session(options=VerifyOptions(delta=False)) as s:
+        assert s.verify(ARCH, PLAN).verified
+        rep = s.verify(ARCH, PLAN, mutate_dist=mut, mutate_pure=True)
+    assert not rep.verified and rep.cache.delta_nodes == 0
