@@ -1,0 +1,97 @@
+"""E-graph tier benchmarks: structural saturation cost, rebuild churn
+under heavy merging, and the fused verification run vs the legacy
+pure-relational configuration at equal output.
+
+The fused row asserts fact-set parity with the legacy registry before
+reporting — the comparison is only meaningful at equal derived output."""
+from __future__ import annotations
+
+import random
+import time
+
+from repro.core.egraph import EGraph, ENode, GraphEGraph
+from repro.core.rules import Propagator
+from repro.core.synth import deep_tp_mlp, register_inputs
+
+LAYERS = 256      # deep enough that every row clears the 50ms gating floor
+REPEATS = 3
+SATURATE_BUILDS = 8  # one saturate "call" = this many full builds
+
+
+def _fact_keys(prop):
+    return {f.key() for facts in prop.store.by_dist.values() for f in facts}
+
+
+def _saturate_row() -> dict:
+    """Build + saturate a GraphEGraph over a deep dist graph: hashcons,
+    congruence closure, and all structural rewrites."""
+    pair = deep_tp_mlp(LAYERS, size=8, tag_layers=False)
+    best = float("inf")
+    classes = 0
+    for _ in range(REPEATS):
+        t0 = time.perf_counter()
+        for _ in range(SATURATE_BUILDS):
+            ge = GraphEGraph(pair.dist, axis="model", axis_size=8)
+        best = min(best, time.perf_counter() - t0)
+        classes = ge.eg.num_classes()
+    return {"name": "egraph_saturate_deep_mlp", "us_per_call": best * 1e6,
+            "derived": f"layers={LAYERS};builds={SATURATE_BUILDS};"
+                       f"nodes={len(pair.dist.nodes)};classes={classes}"}
+
+
+def _rebuild_row() -> dict:
+    """Seeded merge/rebuild churn: the repair path (use-list dedupe, member
+    index reconciliation) under many congruence cascades."""
+    rng = random.Random(7)
+    t0 = time.perf_counter()
+    eg = EGraph()
+    classes = [eg.add(ENode("input", (), (("leaf", i),), (2, 2), "f32"))
+               for i in range(64)]
+    for _ in range(4000):
+        op = rng.choice(["f", "g", "add"])
+        children = (rng.choice(classes), rng.choice(classes))
+        classes.append(eg.add(ENode(op, children, (), (2, 2), "f32")))
+    for _ in range(640):
+        eg.merge(rng.choice(classes), rng.choice(classes))
+        eg.rebuild()
+    dt = time.perf_counter() - t0
+    return {"name": "egraph_rebuild_churn", "us_per_call": dt * 1e6,
+            "derived": f"classes={eg.num_classes()};version={eg.version}"}
+
+
+def _fusion_rows() -> list[dict]:
+    """Full verification run with the fused tier on vs the legacy registry
+    off, at asserted fact-set parity."""
+    pair = deep_tp_mlp(LAYERS, size=8, tag_layers=False)
+    times = {}
+    props = {}
+    for fusion in (False, True):
+        best = float("inf")
+        for _ in range(REPEATS):
+            prop = Propagator(pair.base, pair.dist, 8, fusion=fusion)
+            t0 = time.perf_counter()
+            register_inputs(pair, prop)
+            prop.run()
+            best = min(best, time.perf_counter() - t0)
+            props[fusion] = prop
+        times[fusion] = best
+    assert _fact_keys(props[True]) == _fact_keys(props[False])
+    stats = props[True].fusion.stats()
+    return [
+        {"name": "egraph_fusion_off_deep_mlp", "us_per_call": times[False] * 1e6,
+         "derived": f"layers={LAYERS};rules={props[False].rule_invocations}"},
+        {"name": "egraph_fusion_on_deep_mlp", "us_per_call": times[True] * 1e6,
+         "derived": (f"layers={LAYERS};rules={props[True].rule_invocations};"
+                     f"seeded={stats['seeded']};"
+                     f"discharged={stats['discharged']};"
+                     f"ratio={times[True] / times[False]:.2f}x")},
+    ]
+
+
+def run() -> list[dict]:
+    return [_saturate_row(), _rebuild_row(), *_fusion_rows()]
+
+
+if __name__ == "__main__":
+    for r in run():
+        print(r)

@@ -45,11 +45,19 @@ GATED_ROWS = [
     "fig12_memo_stamp",
     "fig12_disk_warm",
     "roofline_layout_compose",
+    "egraph_saturate_deep_mlp",
+    "egraph_rebuild_churn",
+    "egraph_fusion_off_deep_mlp",
+    "egraph_fusion_on_deep_mlp",
 ]
 
 TOLERANCE = 1.25          # >25% slower than baseline fails
 MIN_GATED_US = 50_000.0   # skip gated rows whose baseline is <50ms (noise)
 FIG11C_MAX_RATIO = 4.0    # 8x layers in at most 4x time (memoization works)
+# process fan-out gate: when the runner had >=4 cores (the par4 row is only
+# emitted then), 4-way partition-parallel rewriting must actually beat the
+# sequential partitioned run by a margin.  Self-relative, runner-agnostic.
+PAR4_MAX_VS_SEQ = 0.9     # par4 <= 0.9x of seq or the fan-out is dead weight
 # runner-speed clamp: the calibration_spin row (a fixed pure-Python
 # workload) measures interpreter speed on each machine; gated ratios are
 # divided by results/baseline calibration so a slower CI runner does not
@@ -104,6 +112,23 @@ def check(results: dict[str, float], baseline: dict[str, float]) -> int:
             failures.append(f"{line} exceeds {TOLERANCE:.2f}x gate")
         else:
             print(f"ok   {line}")
+
+    # par4-vs-seq: only checkable when the runner had cores to fan out onto
+    # (bench_memoization emits the par4 rows only on >=4-core runners)
+    par4 = results.get("fig12_partition_par4")
+    seq = results.get("fig12_partition_seq")
+    if par4 is not None:
+        if not seq:
+            failures.append("fig12_partition_par4 present but "
+                            "fig12_partition_seq missing")
+        else:
+            ratio = par4 / seq
+            line = (f"fig12 par4/seq ratio {ratio:.2f} "
+                    f"(gate {PAR4_MAX_VS_SEQ})")
+            if ratio > PAR4_MAX_VS_SEQ:
+                failures.append(line + " exceeded: process fan-out regressed")
+            else:
+                print(f"ok   {line}")
 
     lo, hi = results.get("fig11c_layers_4"), results.get("fig11c_layers_32")
     if not lo or hi is None:

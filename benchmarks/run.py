@@ -44,6 +44,7 @@ def _calibration_row() -> dict:
 def main() -> None:
     from benchmarks import (
         bench_bug_detection,
+        bench_egraph,
         bench_memoization,
         bench_propagation,
         bench_roofline,
@@ -56,6 +57,7 @@ def main() -> None:
         ("scalability(Fig11)", bench_scalability),
         ("memoization(Fig12)", bench_memoization),
         ("propagation(worklist)", bench_propagation),
+        ("egraph(saturation)", bench_egraph),
         ("bug_detection(Tables4-5)", bench_bug_detection),
         ("roofline(Roofline)", bench_roofline),
     ]

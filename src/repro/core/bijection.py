@@ -128,6 +128,8 @@ class Layout:
     # distinct from _kid which drops src_groups
     _lid: Optional[int] = field(default=None, init=False, compare=False,
                                 repr=False)
+    _eff_ident: Optional[bool] = field(default=None, init=False,
+                                       compare=False, repr=False)
 
     # -- derived -------------------------------------------------------------
     # src_shape/dst_shape/hash are recomputed millions of times on the rule
@@ -181,8 +183,12 @@ class Layout:
     def effectively_identity(self) -> bool:
         """Data order unchanged: non-unit atoms appear in source order (unit
         dims may be inserted/moved freely — they carry no data)."""
-        nonunit = [p for p in self.perm if self.atoms[p] != 1]
-        return nonunit == sorted(nonunit)
+        v = self._eff_ident
+        if v is None:
+            nonunit = [p for p in self.perm if self.atoms[p] != 1]
+            v = nonunit == sorted(nonunit)
+            object.__setattr__(self, "_eff_ident", v)
+        return v
 
     # -- constructors ----------------------------------------------------------
     @staticmethod

@@ -315,12 +315,21 @@ class PartitionedVerifier:
                     nb, nd = bmap.get(f.base), dmap.get(f.dist)
                     if nb is not None and nd is not None:
                         emit(f.moved(nb, nd))
+                if self.prop.fusion is not None:
+                    # re-discharge what the memo template excluded: replayed
+                    # identity-DUPs re-seed the (global) e-graph and the
+                    # settle emits the layer's fusion facts afresh, keeping
+                    # warm-run fact sets and downstream layer input
+                    # signatures identical to the cold run's
+                    self.prop.fusion.settle()
             self.stats.settled_nodes += len(plan.dist_nodes)
         else:
             for f in facts:
                 nb, nd = bmap.get(f.base), dmap.get(f.dist)
                 if nb is not None and nd is not None:
                     emit(f.moved(nb, nd))
+            if self.prop.fusion is not None:
+                self.prop.fusion.settle()
         self.stats.facts_replayed += self.prop.store.num_derived - before
 
     # -- main loop --------------------------------------------------------------
@@ -347,11 +356,19 @@ class PartitionedVerifier:
                 if fp is not None:
                     inside_b = set(plan.base_nodes)
                     ext_b_set = set(ext[0])
+                    # fusion-discharged facts (and their closure cascade) are
+                    # excluded from the template: they can rest on e-class
+                    # merges crossing layer boundaries (content-addressed
+                    # leaves are global), so replaying them positionally into
+                    # another layer is not covered by the layer-local
+                    # fingerprint — the post-replay settle re-derives them
+                    fkeys = self.prop.fusion_keys
                     facts = [
                         f
                         for d in plan.dist_nodes
                         for f in self.prop.store.facts(d)
-                        if f.base in inside_b or f.base in ext_b_set
+                        if (f.base in inside_b or f.base in ext_b_set)
+                        and f.key() not in fkeys
                     ]
                     self._memo[fp] = (sorted(plan.base_nodes),
                                       sorted(plan.dist_nodes), ext[0], facts)

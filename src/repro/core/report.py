@@ -240,6 +240,10 @@ class Report:
     # Session.verify(..., lint=True) ran the static tier first; kept as a
     # plain dict so core stays import-independent of the analysis package
     lint: Optional[dict] = None
+    # equality-saturation tier stats (FusionTier.stats(): classes / merges /
+    # seeded / discharged); None when the tier is off.  A derivation-effort
+    # counter like num_facts: stripped from canonical()
+    egraph: Optional[dict] = None
 
     def summary(self) -> str:
         head = f"{'VERIFIED' if self.verified else 'UNVERIFIED'}"
@@ -256,6 +260,13 @@ class Report:
             lines.append(
                 f"  layers={self.memo.layers} memo_hits={self.memo.memo_hits} "
                 f"replayed={self.memo.facts_replayed}"
+            )
+        if self.egraph:
+            lines.append(
+                f"  egraph: classes={self.egraph.get('classes')} "
+                f"merges={self.egraph.get('merges')} "
+                f"seeded={self.egraph.get('seeded')} "
+                f"discharged={self.egraph.get('discharged')}"
             )
         if self.cache.trace_cached or self.cache.fp_cached:
             lines.append(
@@ -294,7 +305,7 @@ class Report:
         sites distilled from them are kept)."""
         d = json.loads(self.to_json())
         for k in ("elapsed_s", "timings", "cache", "num_facts",
-                  "rule_invocations", "memo", "diagnostics"):
+                  "rule_invocations", "memo", "diagnostics", "egraph"):
             d.pop(k, None)
         d["scenarios"] = [
             {k: v for k, v in row.items()
@@ -323,6 +334,7 @@ class Report:
             "cache": asdict(self.cache),
             "scenarios": list(self.scenarios),
             "lint": self.lint,
+            "egraph": self.egraph,
             "bug_sites": [asdict(b) for b in self.bug_sites],
             "diagnostics": [
                 {"dist": g.dist, "category": g.category, "detail": g.detail,
@@ -358,6 +370,7 @@ class Report:
             cache=CacheStats(**d.get("cache", {})),
             scenarios=list(d.get("scenarios", [])),
             lint=d.get("lint"),
+            egraph=d.get("egraph"),
         )
 
 

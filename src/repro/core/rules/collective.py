@@ -90,28 +90,6 @@ def orthogonal_collective(prop, d: Node) -> None:
                 prop.emit(Fact(SHARD, z.id, d.id, prop.size, lay))
 
 
-@R.rule("axis_index_congruence", ("axis_index",), produces=(DUP,))
-def axis_index_congruence(prop, d: Node) -> None:
-    """axis_index over a *different* axis than the one verified is the same
-    value at every rank of the verified axis — congruent-dup with the
-    baseline axis_index carrying identical params (composite plans: the
-    baseline per-device program queries its own rank the same way)."""
-    axes = d.param("axes") or ()
-    if prop.axis in tuple(axes):
-        return  # rank-dependent along the verified axis: no relation
-    cache = getattr(prop, "_axis_index_bases", None)
-    if cache is None:
-        cache = {}
-        for b in prop.base:
-            if b.op == "axis_index":
-                cache.setdefault(b.params, []).append(b.id)
-        prop._axis_index_bases = cache
-    for zid in cache.get(d.params, []):
-        z = prop.base[zid]
-        if z.dtype == d.dtype and z.shape == d.shape:
-            prop.emit(Fact(DUP, zid, d.id, prop.size, Layout.identity(z.shape)))
-
-
 @R.rule("all_reduce", ("all_reduce",), consumes=(PARTIAL, DUP, LOOPRED),
         produces=(DUP,))
 def all_reduce(prop, d: Node) -> None:

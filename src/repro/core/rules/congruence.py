@@ -20,8 +20,12 @@ GENERIC_EXTRA_OPS = (
     "gather", "scatter", "scatter_add",
 )
 
-# leaves and pure-routing ops fire no rules
-R.noop("input", "param", "axis_index", "ppermute")
+# leaves and pure-routing ops fire no rules.  iota and axis_index are here
+# because their former congruence rules are retired: the fusion tier
+# content-addresses both as shared e-graph leaves and discharges the DUP
+# facts via congruent-class scan (rules/fusion.py); fusion-off runs get the
+# originals back via rules/legacy.py's legacy_registry().
+R.noop("input", "param", "axis_index", "ppermute", "iota")
 
 
 @R.fallback("generic_congruence", consumes=(DUP,), produces=(DUP,))
@@ -60,16 +64,3 @@ def const(prop, d: Node) -> None:
                 continue
             prop.emit(Fact(DUP, b.id, d.id, prop.size, Layout.identity(b.shape)))
             break  # congruent consts share an eclass: one pairing suffices
-
-
-@R.rule("iota_congruence", ("iota",), produces=(DUP,))
-def iota(prop, d: Node) -> None:
-    """iota is a pure function of (shape, dtype, params): congruent iotas
-    in both graphs are duplicates (layer-filtered: cross-layer pairings
-    are redundant and blow up the join-combo search)."""
-    for b in prop.base:
-        if (b.op == "iota" and b.shape == d.shape and b.dtype == d.dtype
-                and b.params == d.params):
-            if d.layer is not None and b.layer is not None and b.layer != d.layer:
-                continue
-            prop.emit(Fact(DUP, b.id, d.id, prop.size, Layout.identity(b.shape)))

@@ -294,6 +294,13 @@ class WorklistEngine:
                     )
                 before = self.prop.store.num_derived
                 self.prop.apply_meta_rules()
+                if self.prop.fusion is not None:
+                    # interleave equality saturation with semi-naive
+                    # evaluation: fact-seeded merges settle, congruent
+                    # classes discharge DUPs (which re-enter via the store
+                    # listeners), and the joint fixpoint is reached when
+                    # neither side derives anything new
+                    self.prop.fusion.settle()
                 if not self._heap and self.prop.store.num_derived == before:
                     break
         finally:

@@ -42,6 +42,7 @@ class Propagator:
         base_eg: Optional[GraphEGraph] = None,
         axis: str = "model",
         registry: Optional[RuleRegistry] = None,
+        fusion: bool = False,
     ) -> None:
         from .registry import DEFAULT_REGISTRY
 
@@ -50,8 +51,35 @@ class Propagator:
         self.size = size
         self.axis = axis
         self.store = store or RelStore()
-        self.base_eg = base_eg or GraphEGraph(base, tag="base")
-        self.registry = registry or DEFAULT_REGISTRY
+        if registry is None:
+            # fusion-on runs use the trimmed default registry (the e-graph
+            # tier discharges what the retired rules derived); fusion-off
+            # runs get the retired rules back so coverage never regresses
+            if fusion:
+                registry = DEFAULT_REGISTRY
+            else:
+                from .legacy import legacy_registry
+
+                registry = legacy_registry()
+        self.registry = registry
+        # keys of facts emitted by the fusion discharge (and its closure
+        # cascade): the layer memoizer must not template them (fusion.py)
+        self.fusion_keys: set = set()
+        self._fusion_recording = False
+        if fusion:
+            from .fusion import FusionTier
+
+            self.fusion: Optional[FusionTier] = FusionTier(self)
+        else:
+            self.fusion = None
+        # congruence-matching view: fusion runs reuse the tier's base view —
+        # its merge set is a strict superset of the standalone view's (it
+        # adds content-addressed leaves and fact-seeded equalities, all
+        # sound per-rank equalities), so matching only gains power, and one
+        # whole GraphEGraph build per verification disappears
+        self.base_eg = base_eg or (
+            self.fusion.base_view if self.fusion is not None
+            else GraphEGraph(base, tag="base"))
         self.rule_invocations = 0
         # RuleProfiler under VerifyOptions(profile=True); None keeps the
         # dispatch hot path clock-free
@@ -107,6 +135,8 @@ class Propagator:
             for nid in todo:
                 self.dispatch(self.dist[nid])
             self.apply_meta_rules()
+            if self.fusion is not None:
+                self.fusion.settle()
             if self.store.num_derived == before:
                 break
 
@@ -134,6 +164,11 @@ class Propagator:
         p.store = store
         p.rule_invocations = 0
         p._engine = None
+        # shards never settle: the fusion tier (listener + e-graph) stays
+        # bound to the parent store; discharge happens after the merge
+        # barrier when add_batch replays the shard facts to the listeners
+        p.fusion = None
+        p._fusion_recording = False
         if self.profiler is not None:
             from ..report import RuleProfiler
 
@@ -159,7 +194,25 @@ class Propagator:
 
     # ------------------------------------------------------------- emission
     def emit(self, fact: Fact, _depth: int = 0) -> None:
-        if not self.store.add(fact) or _depth > 8:
+        if fact.kind == DUP and fact.layout.effectively_identity:
+            # canonicalize effectively-identity same-shape DUP layouts to the
+            # interned identity: a reshape-split round trip composes to e.g.
+            # atoms (2,2)/dst_groups (2,) — the same bijection as identity
+            # (4,) but a different dedup key.  Normalizing keeps rule-derived
+            # and fusion-discharged spellings of one fact key-equal.
+            bshape = self.base[fact.base].shape
+            if bshape == self.dist[fact.dist].shape:
+                ident = Layout.identity(bshape)
+                if fact.layout is not ident:
+                    # manual rebuild: dataclasses.replace costs ~7us and this
+                    # runs for every spelled-out identity DUP on the hot path
+                    fact = Fact(fact.kind, fact.base, fact.dist, fact.size,
+                                ident, fact.reduce_op, fact.dim, fact.nchunk,
+                                fact.index, fact.idxset)
+        added = self.store.add(fact)
+        if added and self._fusion_recording:
+            self.fusion_keys.add(fact.key())
+        if not added or _depth > 8:
             return
         # baseline layout closure: fact(b, d) and z = layout_op(b)  =>  fact(z, d)
         for zid in self.base.consumers(fact.base):
@@ -209,13 +262,18 @@ class Propagator:
     def _class_consumers(self, b: int) -> list[int]:
         """Consumers of every baseline node congruent to ``b`` (e.g. all
         copies of the same constant share an eclass)."""
-        ec = self.base_eg.cls(b)
         if self._ec_consumers is None:
-            self._ec_consumers = {}
+            eg = self.base_eg
+            by_cls: dict[int, list[int]] = {}
             for n in self.base:
                 for i in n.inputs:
-                    self._ec_consumers.setdefault(self.base_eg.cls(i), []).append(n.id)
-        return self._ec_consumers.get(ec, [])
+                    by_cls.setdefault(eg.cls(i), []).append(n.id)
+            # keyed by nid, not class root: under fusion the shared e-graph
+            # keeps merging after this snapshot, so roots move — a nid key
+            # stays valid while still sharing one list per build-time class
+            self._ec_consumers = {
+                n.id: by_cls.get(eg.cls(n.id), []) for n in self.base}
+        return self._ec_consumers.get(b, [])
 
     def _base_candidates(
         self, op: str, b_inputs: Sequence[int], params: Optional[tuple] = None,

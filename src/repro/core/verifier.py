@@ -88,6 +88,13 @@ class VerifyOptions:
     # invalidated, the rest replayed) instead of from scratch
     delta: bool = True
     delta_max_nodes: int = 96
+    # equality-saturation fusion tier (repro.core.rules.fusion): one shared
+    # e-graph over both graphs; relational facts seed e-class merges and
+    # congruent base/dist classes discharge DUP facts without rule firing.
+    # On by default (the trimmed default rule registry relies on it); off
+    # falls back to the legacy registry with the retired congruence rules,
+    # preserving pre-fusion behavior exactly (rules/legacy.py)
+    fusion: bool = True
 
 
 def resolve_backend(options: "VerifyOptions") -> str:
@@ -308,7 +315,8 @@ def verify_graphs(
     if options.engine not in ("worklist", "passes"):
         raise ValueError(f"unknown engine {options.engine!r}: worklist|passes")
     backend = resolve_backend(options)
-    prop = Propagator(base, dist, size, axis=options.axis)
+    prop = Propagator(base, dist, size, axis=options.axis,
+                      fusion=options.fusion)
     if options.profile:
         from .report import RuleProfiler
 
@@ -382,6 +390,7 @@ def verify_graphs(
         rule_invocations=prop.rule_invocations,
         timings=timings,
         cache=CacheStats.from_memo(memo),
+        egraph=prop.fusion.stats() if prop.fusion is not None else None,
     )
 
 

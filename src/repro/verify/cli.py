@@ -97,6 +97,10 @@ def build_parser() -> argparse.ArgumentParser:
     ap.add_argument("--profile", action="store_true",
                     help="collect per-rule / per-op-family timings into the "
                          "report (timings.profile) and print the top rules")
+    ap.add_argument("--no-fusion", action="store_true",
+                    help="disable the equality-saturation fusion tier "
+                         "(falls back to the legacy rule registry with the "
+                         "retired congruence rules)")
     ap.add_argument("--no-stamp", action="store_true",
                     help="disable layer stamping (full trace)")
     ap.add_argument("--cache-dir", metavar="DIR", default=None,
@@ -214,6 +218,8 @@ def build_campaign_parser() -> argparse.ArgumentParser:
     ap.add_argument("--engine", choices=("worklist", "passes"),
                     default="worklist")
     ap.add_argument("--no-stamp", action="store_true")
+    ap.add_argument("--no-fusion", action="store_true",
+                    help="disable the equality-saturation fusion tier")
     ap.add_argument("--cache-dir", metavar="DIR", default=None,
                     help="persistent warm-start cache shared by the "
                          "campaign's cells (clean pairs trace once per "
@@ -256,7 +262,8 @@ def campaign_main(argv: Optional[list] = None) -> int:
     scenarios = args.scenarios.split(",") if args.scenarios else None
     injectors = args.injectors.split(",") if args.injectors else None
     seeds = tuple(range(args.seed_base, args.seed_base + args.seeds))
-    options = VerifyOptions(engine=args.engine, stamp=not args.no_stamp)
+    options = VerifyOptions(engine=args.engine, stamp=not args.no_stamp,
+                            fusion=not args.no_fusion)
     try:
         report = run_campaign(
             [] if args.fuzz_only else archs,
@@ -466,7 +473,8 @@ def main(argv: Optional[list] = None) -> int:
                             parallel_workers=args.workers,
                             parallel_backend=args.backend,
                             profile=args.profile,
-                            stamp=not args.no_stamp)
+                            stamp=not args.no_stamp,
+                            fusion=not args.no_fusion)
     try:
         with Session(options=options,
                      cache_dir=_cache_dir_of(args)) as session:

@@ -362,6 +362,12 @@ def _merge(arch: str, plan: Plan, results) -> Report:
         lints = [r.lint for r in reps if r.lint is not None]
         if lints:
             rep.lint = _merge_lint(lints)
+        egraphs = [r.egraph for r in reps if r.egraph is not None]
+        if egraphs:
+            rep.egraph = {
+                k: sum(e.get(k, 0) for e in egraphs)
+                for k in ("classes", "merges", "seeded", "discharged")
+            }
     rep.arch = arch
     rep.plan = plan.to_dict()
     rep.scenarios = scen_rows

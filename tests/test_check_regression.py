@@ -107,6 +107,44 @@ def test_noise_floor_rows_skipped(capsys):
     assert "floor, skipped" in capsys.readouterr().out
 
 
+def test_egraph_rows_are_gated():
+    # presence: a dropped e-graph bench row is a hard failure
+    assert "egraph_saturate_deep_mlp" in cr.GATED_ROWS
+    assert "egraph_fusion_on_deep_mlp" in cr.GATED_ROWS
+    res = rows()
+    del res["egraph_fusion_on_deep_mlp"]
+    assert cr.check(res, rows()) == 1
+    # regression: the 25% gate applies like any other row
+    res = rows(**{"egraph_saturate_deep_mlp": BASE_US * 1.5})
+    assert cr.check(res, rows()) == 1
+
+
+# ------------------------------------------------------------ par4 gate
+
+def test_par4_gate_skipped_when_row_absent(capsys):
+    # 1-core runners emit no par4 row; the gate must not fire
+    assert cr.check(rows(), rows()) == 0
+    assert "par4/seq" not in capsys.readouterr().out
+
+
+def test_par4_beats_seq_passes(capsys):
+    res = rows(**{"fig12_partition_par4": BASE_US * cr.PAR4_MAX_VS_SEQ * 0.9})
+    assert cr.check(res, rows()) == 0
+    assert "par4/seq ratio" in capsys.readouterr().out
+
+
+def test_par4_slower_than_gate_trips(capsys):
+    res = rows(**{"fig12_partition_par4": BASE_US * cr.PAR4_MAX_VS_SEQ * 1.1})
+    assert cr.check(res, rows()) == 1
+    assert "process fan-out regressed" in capsys.readouterr().out
+
+
+def test_par4_without_seq_fails():
+    res = rows(**{"fig12_partition_par4": BASE_US})
+    del res["fig12_partition_seq"]
+    assert cr.check(res, rows()) == 1
+
+
 def test_empty_baseline_passes_with_fig11c_only():
     # --baseline missing path: check(results, {}) still enforces fig11c
     assert cr.check(rows(), {}) == 0

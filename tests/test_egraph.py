@@ -1,18 +1,103 @@
-"""E-graph invariants: union-find, hashcons/congruence closure, and the
-structural rewrite saturation (hypothesis property tests)."""
-import pytest
+"""E-graph invariants: union-find, hashcons/congruence closure, repair
+bookkeeping, e-class analyses, and the structural rewrite saturation.
 
-pytest.importorskip("hypothesis")  # property tests need it; plain tests run without
-from hypothesis import given, settings, strategies as st
+The core invariants are property-tested twice: with hypothesis when it is
+installed, and over a fixed seeded-random corpus otherwise (the container CI
+has no hypothesis — the seeded tests keep the invariants exercised there)."""
+import random
+
+import pytest
 
 from repro.core.egraph import EGraph, ENode, GraphEGraph
 from repro.core.ir import Graph
+
+try:
+    from hypothesis import given, settings, strategies as st
+    HAVE_HYPOTHESIS = True
+except ImportError:
+    HAVE_HYPOTHESIS = False
 
 
 def _leaf(eg: EGraph, name: str) -> int:
     return eg.add(ENode("input", (), (("leaf", name),), (2, 2), "f32"))
 
 
+# --------------------------------------------------------- invariant checkers
+def check_invariants(eg: EGraph) -> None:
+    """Every invariant _repair must restore (asserted after rebuild)."""
+    # hashcons keys are canonical: children are root ids (congruence closure
+    # left no stale spellings behind)
+    for enode, ec in eg._hashcons.items():
+        assert enode.canon(eg.find) == enode, f"stale hashcons key {enode}"
+    # member index: keyed by roots only, members' canon forms map back to
+    # the same class through the hashcons
+    for ec, nodes in eg._class_nodes.items():
+        assert eg.find(ec) == ec, "absorbed class id left in _class_nodes"
+        for n in nodes:
+            got = eg.lookup(n)
+            assert got == ec, f"member {n} of {ec} resolves to {got}"
+    # every hashcons entry appears in its class's member index
+    for enode, ec in eg._hashcons.items():
+        assert enode in eg._class_nodes[eg.find(ec)]
+    # num_classes agrees with the union-find ground truth
+    roots = {eg.find(i) for i in range(len(eg._parent))}
+    assert eg.num_classes() == len(roots)
+    # no duplicate use entries: a live e-node appears at most once per
+    # (value, owner-class) in each child's use list (the pre-fix _repair
+    # re-appended value-equal canons on every rebuild)
+    for child, uses in eg._uses.items():
+        seen = set()
+        for en, ec in uses:
+            if en in eg._hashcons:
+                key = (en, eg.find(ec))
+                assert key not in seen, f"duplicate use entry {key}"
+                seen.add(key)
+    # analysis: a non-conflicted class analysis matches every member
+    for ec, nodes in eg._class_nodes.items():
+        val = eg.analysis_of(ec)
+        if val is not None:
+            for n in nodes:
+                assert (n.shape, n.dtype) == val
+
+
+def check_congruence_model(eg: EGraph) -> None:
+    """Brute-force reference: congruent e-nodes must share a class."""
+    entries = list(eg._hashcons.items())
+    for i, (n1, c1) in enumerate(entries):
+        for n2, c2 in entries[i + 1:]:
+            if (n1.op == n2.op and n1.params == n2.params
+                    and n1.shape == n2.shape and n1.dtype == n2.dtype
+                    and len(n1.children) == len(n2.children)
+                    and all(eg.find(a) == eg.find(b)
+                            for a, b in zip(n1.children, n2.children))):
+                assert eg.find(c1) == eg.find(c2), (
+                    f"congruent {n1} / {n2} in distinct classes")
+
+
+def _random_egraph(rng: random.Random, n_leaves: int = 5, n_nodes: int = 12):
+    """A random DAG of unary/binary e-nodes over distinct leaves."""
+    eg = EGraph()
+    classes = [_leaf(eg, f"x{i}") for i in range(n_leaves)]
+    for _ in range(n_nodes):
+        op = rng.choice(["f", "g", "add", "tanh"])
+        arity = 1 if op == "tanh" else 2
+        children = tuple(rng.choice(classes) for _ in range(arity))
+        classes.append(eg.add(ENode(op, children, (), (2, 2), "f32")))
+    return eg, classes
+
+
+def _merge_and_check(eg: EGraph, classes, pairs) -> None:
+    for i, j in pairs:
+        eg.merge(classes[i % len(classes)], classes[j % len(classes)])
+    eg.rebuild()
+    v = eg.version
+    eg.rebuild()
+    assert eg.version == v, "rebuild is not idempotent"
+    check_invariants(eg)
+    check_congruence_model(eg)
+
+
+# ------------------------------------------------------------- example tests
 def test_hashcons_dedupes():
     eg = EGraph()
     a, b = _leaf(eg, "a"), _leaf(eg, "b")
@@ -32,32 +117,110 @@ def test_congruence_closure_after_merge():
     eg.rebuild()
     assert eg.find(fa) == eg.find(fb)  # congruence: a==b => f(a)==f(b)
     assert eg.find(fa) != eg.find(fc)
+    check_invariants(eg)
 
 
-@given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 5)), max_size=12))
-@settings(max_examples=100, deadline=None)
-def test_union_find_is_equivalence(pairs):
+def test_repair_no_duplicate_use_entries():
+    """Regression: congruence-merging f(a,c)/f(b,c) during repair must not
+    re-register use entries for the value-equal canonical e-node (the old
+    identity check inflated use lists on every rebuild)."""
     eg = EGraph()
-    leaves = [_leaf(eg, f"x{i}") for i in range(6)]
-    for i, j in pairs:
-        eg.merge(leaves[i], leaves[j])
+    a, b, c = _leaf(eg, "a"), _leaf(eg, "b"), _leaf(eg, "c")
+    eg.add(ENode("f", (a, c), (), (2, 2), "f32"))
+    eg.add(ENode("f", (b, c), (), (2, 2), "f32"))
+    eg.merge(a, b)
     eg.rebuild()
-    # reflexive/symmetric/transitive closure agrees with a reference DSU
-    parent = list(range(6))
-
-    def find(i):
-        while parent[i] != i:
-            parent[i] = parent[parent[i]]
-            i = parent[i]
-        return i
-
-    for i, j in pairs:
-        parent[find(i)] = find(j)
-    for i in range(6):
-        for j in range(6):
-            assert (eg.find(leaves[i]) == eg.find(leaves[j])) == (find(i) == find(j))
+    check_invariants(eg)
+    # one live entry for the surviving f-spelling — never duplicates
+    live = [en for en, _ in eg._uses.get(eg.find(c), ()) if en in eg._hashcons]
+    assert len(live) == len(set(live)) == 1
 
 
+def test_class_nodes_reconciled_on_repair():
+    """Regression: _class_nodes must be pruned/canonicalized during repair so
+    enodes()/num_classes() answer from the index (formerly stale + O(all))."""
+    eg = EGraph()
+    a, b, c = _leaf(eg, "a"), _leaf(eg, "b"), _leaf(eg, "c")
+    fa = eg.add(ENode("f", (a, c), (), (2, 2), "f32"))
+    eg.add(ENode("f", (b, c), (), (2, 2), "f32"))
+    eg.merge(a, b)
+    eg.rebuild()
+    merged = eg.find(fa)
+    members = eg.enodes(merged)
+    assert members and all(eg.lookup(n) == merged for n in members)
+    assert eg.num_classes() == 3  # {a,b}, {c}, {f(a,c), f(b,c)}
+    check_invariants(eg)
+
+
+def test_analysis_join():
+    eg = EGraph()
+    a, b = _leaf(eg, "a"), _leaf(eg, "b")
+    assert eg.analysis_of(a) == ((2, 2), "f32")
+    eg.merge(a, b)
+    assert eg.analysis_of(a) == ((2, 2), "f32")  # equal values join cleanly
+    c = eg.add(ENode("input", (), (("leaf", "c"),), (4,), "i32"))
+    eg.merge(a, c)  # conflicting abstract values bottom out
+    assert eg.analysis_of(a) is None
+
+
+# ----------------------------------------------------- seeded property tests
+@pytest.mark.parametrize("seed", range(15))
+def test_random_merges_keep_invariants(seed):
+    rng = random.Random(seed)
+    eg, classes = _random_egraph(rng)
+    pairs = [(rng.randrange(99), rng.randrange(99))
+             for _ in range(rng.randrange(1, 10))]
+    _merge_and_check(eg, classes, pairs)
+
+
+@pytest.mark.parametrize("seed", range(8))
+def test_interleaved_merge_rebuild(seed):
+    """Merging between rebuilds (the fusion tier's settle pattern)."""
+    rng = random.Random(100 + seed)
+    eg, classes = _random_egraph(rng, n_leaves=4, n_nodes=10)
+    for _ in range(4):
+        for _ in range(rng.randrange(1, 4)):
+            eg.merge(rng.choice(classes), rng.choice(classes))
+        eg.rebuild()
+    check_invariants(eg)
+    check_congruence_model(eg)
+
+
+if HAVE_HYPOTHESIS:
+    @given(st.lists(st.tuples(st.integers(0, 5), st.integers(0, 5)),
+                    max_size=12))
+    @settings(max_examples=100, deadline=None)
+    def test_union_find_is_equivalence(pairs):
+        eg = EGraph()
+        leaves = [_leaf(eg, f"x{i}") for i in range(6)]
+        for i, j in pairs:
+            eg.merge(leaves[i], leaves[j])
+        eg.rebuild()
+        # reflexive/symmetric/transitive closure agrees with a reference DSU
+        parent = list(range(6))
+
+        def find(i):
+            while parent[i] != i:
+                parent[i] = parent[parent[i]]
+                i = parent[i]
+            return i
+
+        for i, j in pairs:
+            parent[find(i)] = find(j)
+        for i in range(6):
+            for j in range(6):
+                assert (eg.find(leaves[i]) == eg.find(leaves[j])) == (
+                    find(i) == find(j))
+
+    @given(st.integers(0, 2**31), st.lists(
+        st.tuples(st.integers(0, 99), st.integers(0, 99)), max_size=10))
+    @settings(max_examples=60, deadline=None)
+    def test_hyp_random_merges_keep_invariants(seed, pairs):
+        eg, classes = _random_egraph(random.Random(seed))
+        _merge_and_check(eg, classes, pairs)
+
+
+# ------------------------------------------------------- structural rewrites
 def test_structural_rewrites_merge_layout_chains():
     """transpose∘transpose and reshape∘reshape collapse; identities vanish."""
     g = Graph()
@@ -72,6 +235,19 @@ def test_structural_rewrites_merge_layout_chains():
     assert ge.same(r2, x)   # reshape round-trip = identity
     assert ge.same(tid, x)  # identity transpose
 
+
+def test_transpose_fuse_handles_missing_perm():
+    """Regression: a transpose without a permutation param crashed the fuse
+    rule (`tuple(p1[i] for i in perm)` dereferenced perm=None)."""
+    g = Graph()
+    x = g.add("input", (), (2, 2), "f32")
+    t1 = g.add("transpose", [x], (2, 2), "f32", {})
+    t2 = g.add("transpose", [t1], (2, 2), "f32", {"permutation": (1, 0)})
+    t3 = g.add("transpose", [t2], (2, 2), "f32", {})
+    ge = GraphEGraph(g)  # must not raise
+    assert not ge.same(t3, x)  # unknown perms merge nothing
+
+
 def test_commutative_canonicalization():
     g = Graph()
     a = g.add("input", (), (2,), "f32")
@@ -83,3 +259,131 @@ def test_commutative_canonicalization():
     ge = GraphEGraph(g)
     assert ge.same(ab, ba)           # add commutes
     assert not ge.same(sub_ab, sub_ba)  # sub does not
+
+
+def test_layout_chain_normalization():
+    """A reshape-split + transpose round trip is identity even though no
+    pairwise fuse rule applies."""
+    g = Graph()
+    z = g.add("input", (), (4, 6), "f32")
+    a = g.add("reshape", [z], (4, 2, 3), "f32", {"new_sizes": (4, 2, 3)})
+    b = g.add("transpose", [a], (2, 3, 4), "f32", {"permutation": (1, 2, 0)})
+    c = g.add("transpose", [b], (4, 2, 3), "f32", {"permutation": (2, 0, 1)})
+    d = g.add("reshape", [c], (4, 6), "f32", {"new_sizes": (4, 6)})
+    ge = GraphEGraph(g)
+    assert ge.same(d, z)
+
+
+def test_equal_chains_merge():
+    g = Graph()
+    z = g.add("input", (), (4, 6), "f32")
+    a1 = g.add("reshape", [z], (2, 2, 6), "f32", {"new_sizes": (2, 2, 6)})
+    b1 = g.add("transpose", [a1], (6, 2, 2), "f32", {"permutation": (2, 0, 1)})
+    a2 = g.add("reshape", [z], (2, 2, 6), "f32", {"new_sizes": (2, 2, 6)})
+    b2 = g.add("transpose", [a2], (6, 2, 2), "f32", {"permutation": (2, 0, 1)})
+    ge = GraphEGraph(g)
+    assert ge.same(b1, b2)
+
+
+def test_all_gather_reduce_scatter_is_all_reduce():
+    """psum vs psum_scatter+all_gather: the two spellings share a class."""
+    g = Graph()
+    w = g.add("input", (), (8, 4), "f32")
+    ar = g.add("all_reduce", [w], (8, 4), "f32",
+               {"axes": ("model",), "groups": "full", "reduce_op": "add"})
+    rs = g.add("reduce_scatter", [w], (2, 4), "f32",
+               {"axes": ("model",), "groups": "full", "scatter_dimension": 0,
+                "tiled": True, "reduce_op": "add"})
+    ag = g.add("all_gather", [rs], (8, 4), "f32",
+               {"axes": ("model",), "groups": "full",
+                "all_gather_dimension": 0, "tiled": True})
+    ge = GraphEGraph(g, axis="model", axis_size=4)
+    assert ge.same(ar, ag)
+
+
+def test_ag_rs_mismatched_dims_do_not_merge():
+    g = Graph()
+    w = g.add("input", (), (8, 8), "f32")
+    ar = g.add("all_reduce", [w], (8, 8), "f32",
+               {"axes": ("model",), "groups": "full", "reduce_op": "add"})
+    rs = g.add("reduce_scatter", [w], (2, 8), "f32",
+               {"axes": ("model",), "groups": "full", "scatter_dimension": 0,
+                "tiled": True, "reduce_op": "add"})
+    ag = g.add("all_gather", [rs], (8, 8), "f32",
+               {"axes": ("model",), "groups": "full",
+                "all_gather_dimension": 1, "tiled": True})
+    ge = GraphEGraph(g, axis="model", axis_size=4)
+    assert not ge.same(ar, ag)  # gather dim != scatter dim: different value
+
+
+def test_ppermute_composition_and_identity():
+    g = Graph()
+    v = g.add("input", (), (4,), "f32")
+    p1 = g.add("ppermute", [v], (4,), "f32",
+               {"axes": ("model",), "perm": ((0, 1), (1, 2), (2, 3), (3, 0))})
+    p2 = g.add("ppermute", [p1], (4,), "f32",
+               {"axes": ("model",), "perm": ((1, 0), (2, 1), (3, 2), (0, 3))})
+    half = g.add("ppermute", [v], (4,), "f32",
+                 {"axes": ("model",), "perm": ((0, 0), (1, 1))})
+    ge = GraphEGraph(g, axis="model", axis_size=4)
+    assert ge.same(p2, v)       # rotate ∘ rotate⁻¹ = identity
+    assert not ge.same(half, v)  # partial identity zero-fills ranks 2,3
+
+
+def test_orthogonal_collectives_commute():
+    g = Graph()
+    u = g.add("input", (), (2, 4), "f32")
+    h1 = g.add("all_gather", [u], (8, 4), "f32",
+               {"axes": ("data",), "groups": "full",
+                "all_gather_dimension": 0, "tiled": True})
+    h2 = g.add("all_reduce", [h1], (8, 4), "f32",
+               {"axes": ("model",), "groups": "full", "reduce_op": "add"})
+    k1 = g.add("all_reduce", [u], (2, 4), "f32",
+               {"axes": ("model",), "groups": "full", "reduce_op": "add"})
+    k2 = g.add("all_gather", [k1], (8, 4), "f32",
+               {"axes": ("data",), "groups": "full",
+                "all_gather_dimension": 0, "tiled": True})
+    ge = GraphEGraph(g, axis="model", axis_size=4)
+    assert ge.same(h2, k2)
+
+
+def test_same_axis_collectives_do_not_commute():
+    g = Graph()
+    u = g.add("input", (), (2, 4), "f32")
+    h1 = g.add("all_gather", [u], (8, 4), "f32",
+               {"axes": ("model",), "groups": "full",
+                "all_gather_dimension": 0, "tiled": True})
+    h2 = g.add("all_reduce", [h1], (8, 4), "f32",
+               {"axes": ("model",), "groups": "full", "reduce_op": "add"})
+    k1 = g.add("all_reduce", [u], (2, 4), "f32",
+               {"axes": ("model",), "groups": "full", "reduce_op": "add"})
+    k2 = g.add("all_gather", [k1], (8, 4), "f32",
+               {"axes": ("model",), "groups": "full",
+                "all_gather_dimension": 0, "tiled": True})
+    ge = GraphEGraph(g, axis="model", axis_size=4)
+    assert not ge.same(h2, k2)
+
+
+def test_content_addressed_leaves_across_graphs():
+    eg = EGraph()
+    gb, gd = Graph(), Graph()
+    bx = gb.add("input", (), (4,), "f32")
+    bi = gb.add("iota", (), (4,), "i32", {"dimension": 0})
+    bax = gb.add("axis_index", (), (), "i32", {"axes": ("data",)})
+    bax_m = gb.add("axis_index", (), (), "i32", {"axes": ("model",)})
+    dx = gd.add("input", (), (4,), "f32")
+    di = gd.add("iota", (), (4,), "i32", {"dimension": 0})
+    dax = gd.add("axis_index", (), (), "i32", {"axes": ("data",)})
+    dax_m = gd.add("axis_index", (), (), "i32", {"axes": ("model",)})
+    vb = GraphEGraph(gb, egraph=eg, tag="b", axis="model", axis_size=4,
+                     content_leaves=True)
+    vd = GraphEGraph(gd, egraph=eg, tag="d", axis="model", axis_size=4,
+                     content_leaves=True)
+
+    def same(a, b):
+        return eg.find(vb.node_class[a]) == eg.find(vd.node_class[b])
+
+    assert same(bi, di)        # iota: pure function of attributes
+    assert same(bax, dax)      # off-axis axis_index: rank-independent
+    assert not same(bax_m, dax_m)  # on the verified axis: rank-dependent
+    assert not same(bx, dx)    # plain inputs stay graph-local

@@ -1,0 +1,218 @@
+"""Fusion parity: the equality-saturation tier (fusion=True, trimmed
+registry + e-graph discharge) must produce the same verdict AND the same
+canonical fact set as the legacy pure-relational configuration
+(fusion=False, retired rules re-registered) — on clean synthetic pairs,
+under every applicable registered injector, and across fixed fuzz seeds.
+Plus feature tests for what only the fused tier can do: discharging DUP
+facts by congruence with zero rule firings."""
+import pytest
+
+from repro.core.inject import DEFAULT_INJECTORS
+from repro.core.ir import Graph
+from repro.core.rules import Propagator, WorklistEngine
+from repro.core.synth import (
+    deep_tp_mlp,
+    fuzz_inject,
+    fuzz_tp_mlp,
+    input_facts_of,
+    register_inputs,
+)
+from repro.core.verifier import VerifyOptions, verify_graphs
+
+FUZZ_SEEDS = list(range(10))
+
+
+def _fact_keys(prop):
+    return {f.key() for facts in prop.store.by_dist.values() for f in facts}
+
+
+def _run_mode(base, dist, size, register, fusion, worklist=False):
+    p = Propagator(base, dist, size, fusion=fusion)
+    if worklist:
+        eng = WorklistEngine(p)
+        register(p)
+        eng.run()
+    else:
+        register(p)
+        p.run()
+    return p
+
+
+def _run_both_modes(base, dist, size, register):
+    on = _run_mode(base, dist, size, register, fusion=True)
+    off = _run_mode(base, dist, size, register, fusion=False)
+    return on, off
+
+
+def _verdict(prop, out_b, out_d):
+    return any(f.base == out_b and f.kind == "dup" and f.clean
+               for f in prop.store.facts(out_d))
+
+
+def _synth_register(pair):
+    def register(p):
+        register_inputs(pair, p)
+
+    return register
+
+
+def _fuzz_register(pair):
+    def register(p):
+        for kind, bi, di, dim in pair.input_relations:
+            b, d = pair.base_inputs[bi], pair.dist_inputs[di]
+            if kind == "dup":
+                p.register_dup(b, d)
+            else:
+                p.register_shard(b, d, dim)
+
+    return register
+
+
+# ------------------------------------------------------------ clean parity
+@pytest.mark.parametrize("layers", [1, 4, 8])
+def test_clean_fact_set_parity(layers):
+    pair = deep_tp_mlp(layers, size=8, tag_layers=False)
+    on, off = _run_both_modes(pair.base, pair.dist, 8, _synth_register(pair))
+    assert _fact_keys(on) == _fact_keys(off)
+    out_b, out_d = pair.base.outputs[0], pair.dist.outputs[0]
+    assert _verdict(on, out_b, out_d) and _verdict(off, out_b, out_d)
+
+
+def test_engine_parity_with_fusion_on():
+    """Fusion must compose with the semi-naive worklist engine: same facts
+    as the pass-based engine when both run fused."""
+    pair = deep_tp_mlp(4, size=8, tag_layers=False)
+    pp = _run_mode(pair.base, pair.dist, 8, _synth_register(pair),
+                   fusion=True, worklist=False)
+    pw = _run_mode(pair.base, pair.dist, 8, _synth_register(pair),
+                   fusion=True, worklist=True)
+    assert _fact_keys(pp) == _fact_keys(pw)
+
+
+# --------------------------------------------------------- injector parity
+@pytest.mark.parametrize("name", DEFAULT_INJECTORS.names())
+def test_injected_parity(name):
+    """Every registered bug must be judged identically with the fused tier
+    on and off — same verdict, same canonical fact set."""
+    pair = deep_tp_mlp(4, size=8, tag_layers=False)
+    spec = DEFAULT_INJECTORS.get(name)
+    if not spec.applicable(pair.dist):
+        pytest.skip(f"{name}: not applicable to deep_tp_mlp")
+    inj = spec(pair.dist)
+    if inj is None:
+        pytest.skip(f"{name}: injector declined the graph")
+    on, off = _run_both_modes(pair.base, inj.graph, 8, _synth_register(pair))
+    assert _fact_keys(on) == _fact_keys(off), f"{name}: fact drift"
+    out_b, out_d = pair.base.outputs[0], inj.graph.outputs[0]
+    assert _verdict(on, out_b, out_d) == _verdict(off, out_b, out_d)
+
+
+# ------------------------------------------------------------- fuzz parity
+@pytest.mark.parametrize("seed", FUZZ_SEEDS)
+def test_fuzz_clean_parity(seed):
+    pair, spec = fuzz_tp_mlp(seed, tag_layers=False)
+    on, off = _run_both_modes(pair.base, pair.dist, spec.size,
+                              _fuzz_register(pair))
+    assert _fact_keys(on) == _fact_keys(off), f"seed {seed}: fact drift"
+    out_b, out_d = pair.base.outputs[0], pair.dist.outputs[0]
+    assert _verdict(on, out_b, out_d) and _verdict(off, out_b, out_d)
+
+
+@pytest.mark.parametrize("seed", FUZZ_SEEDS)
+def test_fuzz_injected_parity(seed):
+    pair, spec = fuzz_tp_mlp(seed, tag_layers=False)
+    inj = fuzz_inject(pair, seed)
+    if inj is None:
+        pytest.skip(f"seed {seed}: no applicable injector")
+    on, off = _run_both_modes(pair.base, inj.graph, spec.size,
+                              _fuzz_register(pair))
+    assert _fact_keys(on) == _fact_keys(off), f"seed {seed}: fact drift"
+    out_b, out_d = pair.base.outputs[0], inj.graph.outputs[0]
+    assert _verdict(on, out_b, out_d) == _verdict(off, out_b, out_d)
+
+
+# ---------------------------------------------------- partitioned pipeline
+def test_verify_graphs_partitioned_parity():
+    """The layer-partitioned path (memo snapshots must exclude discharge
+    facts; replay re-settles the tier) agrees across modes and reports
+    e-graph stats only when fused."""
+    pair = deep_tp_mlp(12, size=8, tag_layers=True)
+    reports = {}
+    for fusion in (True, False):
+        reports[fusion] = verify_graphs(
+            pair.base, pair.dist, size=8, input_facts=input_facts_of(pair),
+            base_inputs=pair.base_inputs, dist_inputs=pair.dist_inputs,
+            options=VerifyOptions(fusion=fusion),
+        )
+    assert reports[True].verified == reports[False].verified
+    assert reports[True].verified
+    assert reports[True].egraph is not None
+    assert reports[True].egraph["classes"] > 0
+    assert reports[False].egraph is None
+
+
+def test_report_roundtrip_keeps_egraph_stats():
+    pair = deep_tp_mlp(2, size=8, tag_layers=False)
+    rep = verify_graphs(
+        pair.base, pair.dist, size=8, input_facts=input_facts_of(pair),
+        base_inputs=pair.base_inputs, dist_inputs=pair.dist_inputs,
+        options=VerifyOptions(fusion=True),
+    )
+    from repro.core.report import Report
+
+    back = Report.from_json(rep.to_json())
+    assert back.egraph == rep.egraph
+    assert rep.egraph is not None and "discharged" in rep.egraph
+    # canonical form (used for stamping) must not depend on the stats
+    assert "egraph" not in rep.canonical()
+
+
+# ------------------------------------------------- congruence-only dischar.
+def test_retired_iota_rule_is_subsumed_by_discharge():
+    """The trimmed registry has no iota_congruence rule — content-addressed
+    iota leaves merge in the shared e-graph and the DUP is discharged by
+    congruence alone."""
+    gb, gd = Graph("base"), Graph("dist")
+    bi = gb.add("iota", (), (8,), "i32", {"dimension": 0})
+    gb.mark_output(bi)
+    di = gd.add("iota", (), (8,), "i32", {"dimension": 0})
+    gd.mark_output(di)
+
+    p = Propagator(gb, gd, 4, fusion=True)
+    assert not any(r.name == "iota_congruence"
+                   for rs in p.registry._by_op.values() for r in rs)
+    p.run()
+    assert _verdict(p, bi, di)
+    assert p.fusion.stats()["discharged"] >= 1
+    assert p.fusion_keys  # discharge facts are recorded for memo exclusion
+    # the legacy configuration still has the rule and agrees on the verdict
+    off = Propagator(gb, gd, 4, fusion=False)
+    off.run()
+    assert _verdict(off, bi, di)
+
+
+def test_discharge_across_collective_spellings():
+    """DUP on the psum spelling transfers to the reduce_scatter+all_gather
+    spelling purely through the saturated e-graph."""
+    gb, gd = Graph("base"), Graph("dist")
+    b = gb.add("input", (), (8, 4), "f32")
+    gb.mark_output(b)
+    z = gd.add("input", (), (8, 4), "f32")
+    ar = gd.add("all_reduce", [z], (8, 4), "f32",
+                {"axes": ("model",), "reduce_op": "add"})
+    rs = gd.add("reduce_scatter", [z], (2, 4), "f32",
+                {"axes": ("model",), "scatter_dimension": 0,
+                 "reduce_op": "add"})
+    ag = gd.add("all_gather", [rs], (8, 4), "f32",
+                {"axes": ("model",), "all_gather_dimension": 0,
+                 "tiled": True})
+    gd.mark_output(ag)
+
+    p = Propagator(gb, gd, 4, fusion=True)
+    p.register_dup(b, ar)  # assert the psum spelling is replicated
+    p.run()
+    # the e-graph proves ar ≡ ag, so the DUP crosses spellings
+    assert any(f.base == b and f.kind == "dup" and f.clean
+               for f in p.store.facts(ag))
+    assert p.fusion.stats()["seeded"] >= 1
+    assert p.fusion.stats()["discharged"] >= 1
